@@ -1,0 +1,69 @@
+"""Ablation: capacity factor in the L_R (dispatch) strategy.
+
+The paper's Router-Aided Dynamic Loading equalizes per-node work to the
+max selected count; the SPMD realization uses a static capacity C.  This
+ablation quantifies the trade-off the capacity factor controls:
+
+  * drop rate — routing decisions above C are dropped (quality risk),
+  * expert FLOPs — C slots are computed whether full or padded (waste),
+
+on the paper's 16-expert/top-4 arithmetic across batch sizes, plus the
+L_B (dense) endpoint for reference: L_B is capacity_factor = E/k with
+zero drops, i.e. the paper's two §4.2 strategies are the endpoints of
+this curve.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import markdown_table, save_result
+from repro.core import moe, router
+
+
+def drop_rate(top_idx, num_experts: int, capacity: int) -> float:
+    """Fraction of (token, k) routing decisions that exceed capacity."""
+    _, _, slot_of = moe.make_dispatch_plan(
+        top_idx, num_experts, 0, num_experts, capacity)
+    nbuf = num_experts * capacity
+    return float(jnp.mean(slot_of == nbuf))
+
+
+def run() -> dict:
+    e, k = 16, 4
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, e)) * 0.5      # mildly skewed router
+    out = {}
+    for t in (64, 256, 1024):
+        x = jax.random.normal(jax.random.fold_in(key, t), (t, 64))
+        r = router.route(w, x, k)
+        rows = {}
+        for cf in (1.0, 1.25, 1.5, 2.0, 4.0):
+            cap = moe.round_capacity(t, k, e, cf)
+            rows[cf] = {
+                "capacity": cap,
+                "drop_rate": drop_rate(r.top_idx, e, cap),
+                "slot_flops_ratio": e * cap / (t * k),  # computed/needed
+            }
+        # L_B endpoint: every expert computes every token
+        rows["dense(L_B)"] = {"capacity": t, "drop_rate": 0.0,
+                              "slot_flops_ratio": e / k}
+        out[str(t)] = rows
+    save_result("ablation_capacity", out)
+    return out
+
+
+def render(out: dict) -> str:
+    hdr = ["tokens", "capacity factor", "capacity", "drop rate",
+           "computed/needed FLOPs"]
+    body = []
+    for t, rows in out.items():
+        for cf, v in rows.items():
+            body.append([t, cf, v["capacity"], f"{v['drop_rate']:.3f}",
+                         f"{v['slot_flops_ratio']:.2f}x"])
+    return markdown_table(hdr, body)
+
+
+if __name__ == "__main__":
+    print(render(run()))

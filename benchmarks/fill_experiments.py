@@ -1,0 +1,35 @@
+"""Render the §Roofline table from results/dryrun and splice it into
+EXPERIMENTS.md (replaces ROOFLINE_TABLE_PLACEHOLDER or the previous table
+between the markers)."""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import roofline  # noqa: E402
+
+BEGIN = "<!-- ROOFLINE:BEGIN -->"
+END = "<!-- ROOFLINE:END -->"
+
+
+def main():
+    out = roofline.run("16x16")
+    table = roofline.render(out)
+    block = f"{BEGIN}\n{table}\n{END}"
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    if "ROOFLINE_TABLE_PLACEHOLDER" in text:
+        text = text.replace("ROOFLINE_TABLE_PLACEHOLDER", block)
+    elif BEGIN in text:
+        text = re.sub(re.escape(BEGIN) + r".*?" + re.escape(END), block,
+                      text, flags=re.S)
+    else:
+        raise SystemExit("no insertion point in EXPERIMENTS.md")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(out['rows'])} roofline rows into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

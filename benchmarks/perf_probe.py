@@ -1,0 +1,46 @@
+"""§Perf diagnostic: lower one (arch, shape), print roofline terms and the
+top HBM/collective contributors (trip-multiplied).
+
+    PYTHONPATH=src:. python -m benchmarks.perf_probe --arch qwen2_72b \
+        --shape train_4k [--override '{"moe_strategy": "dense"}']
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+
+from repro.launch import hlo
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS, lower_pair
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--override", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=18)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    over = json.loads(args.override) if args.override else None
+    compiled, cfg = lower_pair(args.arch, args.shape, mesh, over)
+    txt = compiled.as_text()
+    t = hlo.analyze(txt)
+    print(f"compute={t.flops / PEAK_FLOPS:.3e}s "
+          f"memory={t.hbm_bytes / HBM_BW:.3e}s "
+          f"collective={t.collective_bytes / ICI_BW:.3e}s")
+    print(f"coll by kind: "
+          f"{ {k: f'{v:.3e}' for k, v in t.coll.items()} }")
+    print("\ntop HBM contributors (bytes, trip-multiplied):")
+    for key, nb, _ in hlo.breakdown(txt, top=args.top):
+        print(f"  {nb:.3e}  {key}")
+    ma = compiled.memory_analysis()
+    print(f"\npeak/dev raw: {(ma.argument_size_in_bytes + ma.temp_size_in_bytes + ma.output_size_in_bytes - ma.alias_size_in_bytes)/2**30:.2f} GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""§Roofline: aggregate the dry-run records into the per-(arch x shape)
+roofline table (compute / memory / collective terms, dominant bottleneck,
+MODEL_FLOPS ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, markdown_table, save_result
+
+
+def load_records(mesh: str = "16x16", tag: str = "") -> list[dict]:
+    recs = []
+    pat = os.path.join(RESULTS_DIR, "dryrun", f"*_{mesh}{tag}.json")
+    for path in sorted(glob.glob(pat)):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def run(mesh: str = "16x16") -> dict:
+    recs = load_records(mesh)
+    rows = []
+    for r in recs:
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "useful_flop_ratio": rl["useful_flop_ratio"],
+            "peak_gib": r["memory"]["peak_per_device_tpu_est"] / 2**30,
+        })
+    out = {"mesh": mesh, "rows": rows}
+    save_result(f"roofline_{mesh}", out)
+    return out
+
+
+def render(out: dict) -> str:
+    hdr = ["arch", "shape", "compute (s)", "memory (s)", "collective (s)",
+           "dominant", "useful FLOP ratio", "peak GiB/dev"]
+    body = [[r["arch"], r["shape"], f"{r['compute_s']:.2e}",
+             f"{r['memory_s']:.2e}", f"{r['collective_s']:.2e}",
+             r["dominant"], f"{r['useful_flop_ratio']:.2f}",
+             f"{r['peak_gib']:.2f}"]
+            for r in sorted(out["rows"], key=lambda x: (x["arch"], x["shape"]))]
+    return markdown_table(hdr, body)
+
+
+if __name__ == "__main__":
+    print(render(run()))

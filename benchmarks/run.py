@@ -1,0 +1,53 @@
+"""Benchmark orchestrator: one section per paper table/figure plus the
+roofline aggregation.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip table4]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SECTIONS = [
+    ("table3_strategies", "Paper Table 3 — strategy comparison "
+                          "(Naive / P-L_B / P-L_R-D)"),
+    ("table4_scalability", "Paper Table 4 — expert-parallel scalability"),
+    ("table56_perfmodel", "Paper Tables 5+6, Fig. 8 — perf model & cost"),
+    ("fig4_prestack", "Paper Fig. 4 — prestacked vs unstacked layout"),
+    ("ablation_capacity", "Ablation — L_R capacity factor "
+                          "(drop rate vs wasted FLOPs; L_B as endpoint)"),
+    ("roofline", "Roofline terms per (arch x shape) from the dry-run"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip", nargs="*", default=[])
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    for mod_name, title in SECTIONS:
+        if mod_name in args.skip or (args.only and mod_name not in args.only):
+            continue
+        print(f"\n{'=' * 72}\n{title}\n{'=' * 72}", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            out = mod.run()
+            print(mod.render(out))
+            print(f"[{mod_name} done in {time.time() - t0:.1f}s]", flush=True)
+        except Exception:
+            failures.append(mod_name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED sections: {failures}")
+        return 1
+    print("\nall benchmark sections completed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

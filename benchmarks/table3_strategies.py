@@ -1,0 +1,89 @@
+"""Paper Table 3: Naive vs P-L_B vs P-L_R-D.
+
+On this CPU container we reproduce the *mechanism* of Table 3 with two
+complementary measurements on the reduced DBRX config:
+
+  1. wall-clock decode throughput per strategy (single device), and
+  2. deterministic cost counters from the lowered HLO — expert FLOPs per
+     token (waste: L_B computes all E experts, L_R computes ~top-k) and
+     collectives per layer (centralized = 2, decentralized = 1),
+
+which are exactly the two levers the paper attributes its 1.7x / 5.2x MoE
+speedups to (§4.2, §4.3).  The collective count is measured on a host-device
+mesh in a subprocess (see run.py) — here we report FLOPs + throughput.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result, time_fn
+from repro.configs.base import get_config
+from repro.launch import hlo
+from repro.models.model import build_model
+
+STRATEGIES = {
+    "naive":   dict(prestack=False, moe_strategy="dispatch",
+                    expert_parallel="centralized"),
+    "P-L_B":   dict(prestack=True, moe_strategy="dense",
+                    expert_parallel="centralized"),
+    "P-L_R-D": dict(prestack=True, moe_strategy="dispatch",
+                    expert_parallel="decentralized"),
+}
+
+
+def run(iters: int = 8) -> dict:
+    # reduced dims but the paper's true expert arithmetic (16 experts, top-4)
+    # and a realistic decode batch so capacity dispatch beats busy-full
+    # loading on FLOPs exactly as in Table 3
+    base = get_config("dbrx").reduced().replace(
+        num_experts=16, num_experts_padded=16, experts_per_token=4)
+    b, steps_cache = 32, 64
+    rows = {}
+    for name, kw in STRATEGIES.items():
+        cfg = base.replace(**kw)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        cache = model.init_cache(b, steps_cache)
+        step = {"tokens": jnp.zeros((b, 1), jnp.int32),
+                "lengths": jnp.full((b,), 8, jnp.int32)}
+
+        fn = jax.jit(lambda p, c, s: model.decode_step(p, c, s))
+        t = time_fn(fn, params, cache, step, iters=iters)
+        lowered = fn.lower(params, cache, step)
+        totals = hlo.analyze(lowered.compile().as_text())
+        rows[name] = {
+            "decode_s_per_step": t,
+            "decode_tok_per_s": b / t,
+            "hlo_flops": totals.flops,
+            "hlo_flops_per_token": totals.flops / b,
+        }
+    # mechanism assertions (Table 3's causes)
+    # L_B computes every expert -> more FLOPs than dispatch strategies
+    assert rows["P-L_B"]["hlo_flops"] > rows["P-L_R-D"]["hlo_flops"], rows
+    rows["_meta"] = {
+        "config": base.name,
+        "paper_table3": {"naive": 1.2, "P-L_B": 2.1, "P-L_R-D": 6.1},
+        "flops_ratio_LB_over_LRD": rows["P-L_B"]["hlo_flops"]
+        / rows["P-L_R-D"]["hlo_flops"],
+    }
+    save_result("table3_strategies", rows)
+    return rows
+
+
+def render(rows: dict) -> str:
+    from benchmarks.common import markdown_table
+    hdr = ["strategy", "decode tok/s (CPU, reduced)", "HLO FLOPs/token",
+           "paper gen TP (tokens/s)"]
+    paper = rows["_meta"]["paper_table3"]
+    body = [[k,
+             f"{v['decode_tok_per_s']:.2f}",
+             f"{v['hlo_flops_per_token']:.3g}",
+             paper[k]]
+            for k, v in rows.items() if not k.startswith("_")]
+    return markdown_table(hdr, body)
+
+
+if __name__ == "__main__":
+    print(render(run()))

@@ -1,0 +1,63 @@
+"""Paper Tables 5+6 and Fig. 8: cost efficiency and estimated bounds.
+
+Pure analytical reproduction from core/perf_model (validated unit-for-unit
+in tests/test_perf_model.py) plus the RDMA NIC projections.
+"""
+from __future__ import annotations
+
+from benchmarks.common import markdown_table, save_result
+from repro.core import perf_model as pm
+
+
+def run() -> dict:
+    table6 = pm.scaling_table()
+    fig8 = {
+        hw.name: [
+            {"nodes": n, "tok_per_s": pm.estimate(pm.DBRX_TABLE1, hw, n).throughput}
+            for n in (2, 3, 4, 6, 8)
+        ]
+        for hw in (pm.M2_ULTRA_10GBE, pm.M2_ULTRA_ROCE, pm.M2_ULTRA_IB)
+    }
+    table5 = {
+        "databricks-8xh100": {
+            "throughput": 112.5,
+            "tp_per_usd": pm.cost_efficiency(112.5, 1, pm.DGX_H100x8)},
+        "ours-2xm2ultra": {
+            "throughput": 5.9,
+            "tp_per_usd": pm.cost_efficiency(5.9, 2, pm.M2_ULTRA_10GBE)},
+    }
+    table5["_ratio"] = (table5["ours-2xm2ultra"]["tp_per_usd"]
+                        / table5["databricks-8xh100"]["tp_per_usd"])
+    out = {"table5": table5, "table6": table6, "fig8": fig8}
+    save_result("table56_perfmodel", out)
+    return out
+
+
+def render(out: dict) -> str:
+    t6 = markdown_table(
+        ["#nodes", "Load (s)", "Comp (s)", "Lat (s)", "Trans (s)",
+         "Bound (s)", "TP (tok/s)", "paper TP"],
+        [[r["nodes"], f"{r['load_s']:.3f}", f"{r['comp_s']:.3f}",
+          f"{r['lat_s']:.3f}", f"{r['trans_s']:.3f}", f"{r['bound_s']:.3f}",
+          f"{r['tokens_per_sec']:.1f}",
+          {2: 9.7, 3: 10.4, 4: 12.3, 6: 13.9, 8: 14.2}[r["nodes"]]]
+         for r in out["table6"]])
+    t5 = markdown_table(
+        ["solution", "TP (tok/s)", "TP/USD", "paper TP/USD"],
+        [["databricks 8xH100", 112.5,
+          f"{out['table5']['databricks-8xh100']['tp_per_usd']:.6f}", 0.000389],
+         ["ours 2x M2 Ultra", 5.9,
+          f"{out['table5']['ours-2xm2ultra']['tp_per_usd']:.6f}", 0.000447]])
+    fig8 = markdown_table(
+        ["#nodes"] + list(out["fig8"]),
+        [[n] + [f"{out['fig8'][hw][i]['tok_per_s']:.1f}"
+                for hw in out["fig8"]]
+         for i, n in enumerate((2, 3, 4, 6, 8))])
+    return (f"### Table 6 — estimated bounds (10 GbE)\n{t6}\n\n"
+            f"### Table 5 — cost efficiency (ratio "
+            f"{out['table5']['_ratio']:.2f}x, paper claims 1.15x)\n{t5}\n\n"
+            f"### Fig. 8 — NIC projections (tok/s)\n{fig8}")
+
+
+if __name__ == "__main__":
+    print(render(run()))

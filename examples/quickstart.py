@@ -1,0 +1,61 @@
+"""Quickstart: build a reduced MoE model, run the paper's three execution
+strategies, and compare their cost profile.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import perf_model
+from repro.models.model import build_model
+
+
+def main():
+    # the paper's model (DBRX: 16 experts, top-4) at smoke scale
+    cfg = get_config("dbrx").reduced()
+    print(f"arch={cfg.name} family={cfg.family} experts={cfg.num_experts} "
+          f"top_k={cfg.experts_per_token}")
+
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                              jnp.int32),
+    }
+
+    # paper §5.2 strategy matrix: Naive / P-L_B / P-L_R-D
+    strategies = {
+        "naive":   dict(prestack=False, moe_strategy="dispatch",
+                        expert_parallel="centralized"),
+        "P-L_B":   dict(prestack=True, moe_strategy="dense",
+                        expert_parallel="centralized"),
+        "P-L_R-D": dict(prestack=True, moe_strategy="dispatch",
+                        expert_parallel="decentralized"),
+    }
+    outs = {}
+    for name, kw in strategies.items():
+        model = build_model(cfg.replace(capacity_factor=8.0, **kw))
+        params = model.init(jax.random.PRNGKey(0))
+        logits, aux = model.forward(params, batch)
+        loss, _ = model.loss(params, batch)
+        outs[name] = np.asarray(logits, np.float32)
+        print(f"{name:8s} loss={float(loss):.4f} "
+              f"logits[0,0,:3]={np.asarray(logits[0, 0, :3])}")
+
+    # all strategies compute the same function (cost differs, math does not)
+    np.testing.assert_allclose(outs["naive"], outs["P-L_R-D"], rtol=2e-3,
+                               atol=2e-3)
+    print("strategies agree numerically ✓")
+
+    # the paper's performance model, reproducing Table 6
+    print("\npaper Table 6 (DBRX on 2–8 Mac Studios, 10 GbE):")
+    for row in perf_model.scaling_table():
+        print(f"  {row['nodes']} nodes: bound {row['bound_s']*1e3:6.1f} ms/tok"
+              f" -> {row['tokens_per_sec_table6']:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Serving example: batched requests through the engine, reporting the
+paper's §5.2 breakdown (prompt evaluation vs token generation) and the
+Table 1 routing statistic.
+
+    PYTHONPATH=src python examples/serve_moe.py
+"""
+from repro.configs.base import get_config
+from repro.launch.serve import serve_demo
+
+
+def main():
+    cfg = get_config("qwen3_moe_30b_a3b").reduced()
+    print(f"serving {cfg.name} ({cfg.num_experts} experts, "
+          f"top-{cfg.experts_per_token})")
+    serve_demo(cfg, requests=6, new_tokens=12, prompt_len=24, max_batch=3)
+
+
+if __name__ == "__main__":
+    main()

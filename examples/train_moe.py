@@ -1,0 +1,45 @@
+"""End-to-end training driver: a ~100M-parameter MoE (the paper's DBRX
+family at laptop scale) trained for a few hundred steps on synthetic data.
+
+    PYTHONPATH=src python examples/train_moe.py [--steps 300]
+"""
+import argparse
+
+from repro.configs.base import get_config
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_moe_100m.npz")
+    args = ap.parse_args()
+
+    # ~100M-param MoE in the DBRX family: 8 layers, d=512, 16 experts top-4
+    cfg = get_config("dbrx").replace(
+        name="dbrx-100m",
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=8, head_dim=64,
+        d_ff=512, vocab_size=8192,
+        num_experts=16, num_experts_padded=16, experts_per_token=4,
+        dtype="float32", param_dtype="float32", remat=False,
+        moe_strategy="dispatch", expert_parallel="decentralized",
+    )
+    from repro.models.model import build_model  # param count report
+    import jax
+    n = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))))
+    print(f"training {cfg.name}: {n/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+
+    params, history = train(cfg, steps=args.steps, global_batch=args.batch,
+                            seq_len=args.seq, lr=1e-3, log_every=20,
+                            ckpt_path=args.ckpt)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({'improved ✓' if last < first else 'NOT improved ✗'})")
+
+
+if __name__ == "__main__":
+    main()

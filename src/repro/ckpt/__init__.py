@@ -1,0 +1,1 @@
+from repro.ckpt.io import save, restore, convert_unstacked, to_unstacked, flatten_tree, unflatten_tree

@@ -1,0 +1,99 @@
+"""Checkpointing: flat-key npz save/restore + the prestacking converter.
+
+The converter is the TPU analogue of the paper's one-time preprocessing
+script (§4.1): it takes an *unstacked* checkpoint (one entry per layer /
+per expert, the naive layout) and rewrites it into the canonical
+*prestacked* layout — one contiguous array per weight kind with leading
+(L[, E]) axes — including granite-style expert padding.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prestack
+
+SEP = "//"
+
+
+def flatten_tree(tree) -> dict:
+    flat = {}
+
+    def rec(t, path):
+        if isinstance(t, dict):
+            for k in sorted(t):
+                rec(t[k], path + [str(k)])
+        else:
+            flat[SEP.join(path)] = t
+
+    rec(tree, [])
+    return flat
+
+
+def unflatten_tree(flat: dict) -> dict:
+    tree: dict = {}
+    for key, v in flat.items():
+        node = tree
+        parts = key.split(SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def save(path: str, params, step: int = 0) -> None:
+    flat = {k: np.asarray(v) for k, v in flatten_tree(params).items()}
+    flat["__step__"] = np.asarray(step, np.int64)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+
+
+def restore(path: str) -> tuple[dict, int]:
+    with np.load(path if path.endswith(".npz") else path + ".npz") as z:
+        flat = {k: z[k] for k in z.files if k != "__step__"}
+        step = int(z["__step__"]) if "__step__" in z.files else 0
+    return unflatten_tree({k: jnp.asarray(v) for k, v in flat.items()}), step
+
+
+# ---------------------------------------------------------------------------
+# prestack converter (paper §4.1, the one-time stacking script)
+# ---------------------------------------------------------------------------
+
+_LAYER_RE = re.compile(r"^layer_(\d+)$")
+_EXPERT_RE = re.compile(r"^expert_(\d+)$")
+
+
+def convert_unstacked(unstacked: dict, num_experts_padded: int = 0) -> dict:
+    """{"layer_0": {...}, "layer_1": {...}} -> prestacked tree with a leading
+    L axis; inside each layer an optional {"expert_<i>": {...}} level is
+    stacked into a leading E axis and zero-padded to ``num_experts_padded``.
+    """
+    layer_keys = sorted((k for k in unstacked if _LAYER_RE.match(k)),
+                        key=lambda k: int(_LAYER_RE.match(k).group(1)))
+    if not layer_keys:
+        raise ValueError("no layer_<i> entries found")
+
+    def stack_layer(layer: dict) -> dict:
+        e_keys = sorted((k for k in layer if _EXPERT_RE.match(k)),
+                        key=lambda k: int(_EXPERT_RE.match(k).group(1)))
+        if not e_keys:
+            return layer
+        experts = prestack.stack_experts([layer[k] for k in e_keys])
+        if num_experts_padded:
+            experts = prestack.pad_experts(experts, num_experts_padded)
+        rest = {k: v for k, v in layer.items() if k not in e_keys}
+        return {**rest, "experts": experts}
+
+    return prestack.stack_blocks([stack_layer(unstacked[k])
+                                  for k in layer_keys])
+
+
+def to_unstacked(blocks, num_layers: int) -> dict:
+    """Inverse converter (prestacked -> naive layout) for the Fig.4-style
+    baseline benchmark."""
+    return {f"layer_{i}": layer
+            for i, layer in enumerate(prestack.unstack_blocks(blocks))}

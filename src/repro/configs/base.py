@@ -1,0 +1,243 @@
+"""Config system: ModelConfig (architecture + runtime knobs), the four
+assigned input shapes, and ``input_specs()`` ShapeDtypeStruct stand-ins.
+
+Every assigned architecture provides a module ``configs/<id>.py`` exporting
+``CONFIG`` (exact published spec) built from this dataclass; ``reduced()``
+derives the CPU smoke-test variant (<=2 layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    # attention
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    use_rope: bool = True
+    rope_theta: float = 1e6
+    mrope: bool = False
+    mrope_sections: tuple = (16, 24, 24)
+    sliding_window: int | None = None     # native local attention (hybrid)
+    long_context_window: int = 4096       # SWA variant for long_500k
+    long_context_threshold: int = 262144  # >= this seq len -> use SWA variant
+    # moe
+    num_experts: int = 0
+    num_experts_padded: int = 0      # >= num_experts, divisible by EP shards
+    experts_per_token: int = 0
+    router_norm_topk: bool = True
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_dconv: int = 4
+    # hybrid (rg-lru)
+    lru_width: int = 0
+    conv1d_width: int = 4
+    # frontend stubs
+    num_patch_tokens: int = 0        # vlm: patch embeddings prepended
+    # misc architecture
+    act: str = "silu"
+    norm: str = "rmsnorm"
+    positional: str = "rope"         # rope | sinusoidal | none
+    tie_embeddings: bool = False
+    # runtime / paper-method knobs (DESIGN.md §5)
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    moe_strategy: str = "dispatch"          # dense (=L_B) | dispatch (=L_R)
+    expert_parallel: str = "decentralized"  # centralized | decentralized | a2a
+    expert_replication: int = 1             # paper §5.3 overlapping placement
+    capacity_factor: float = 1.25
+    prestack: bool = True                   # C2: stacked layer/expert layout
+    use_kernel: bool = False                # Pallas grouped-GEMM path
+    use_flash_kernel: bool = False          # Pallas flash-attention path
+    remat: bool = True
+    vocab_pad: int = 256
+    kv_cache_shard: str = "seq"             # seq (CP decode) | hd | kv | none
+    kv_cache_dtype: str = "native"          # native | int8 (quantized cache)
+    source: str = ""                 # citation
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def dtype_jnp(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def param_dtype_jnp(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def vocab_padded(self) -> int:
+        return _round_up(self.vocab_size, self.vocab_pad)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def n_params(self) -> int:
+        """Total parameter count (ignores vocab/expert padding)."""
+        d, L = self.d_model, self.num_layers
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            di = self.ssm_expand * d
+            h = di // self.ssm_headdim
+            per = (d * (2 * di + 2 * self.ssm_state + h)
+                   + self.ssm_dconv * (di + 2 * self.ssm_state)
+                   + di * d + 3 * h + di)
+            return emb + L * per
+        attn = d * (self.num_heads + 2 * self.num_kv_heads) * self.head_dim \
+            + self.num_heads * self.head_dim * d
+        if self.is_moe:
+            ffn = self.num_experts * 3 * d * self.d_ff + d * self.num_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        if self.family == "hybrid":
+            n_attn = sum(1 for i in range(L) if i % 3 == 2)
+            n_rec = L - n_attn
+            w = self.lru_width
+            rec = d * w * 2 + self.conv1d_width * w + 2 * w * w + w * d + 3 * w
+            return emb + n_attn * (attn + ffn) + n_rec * (rec + ffn)
+        return emb + L * (attn + ffn)
+
+    def n_active_params(self) -> int:
+        """Active per-token params (MoE: top-k experts only)."""
+        if not self.is_moe:
+            return self.n_params()
+        d, L = self.d_model, self.num_layers
+        attn = d * (self.num_heads + 2 * self.num_kv_heads) * self.head_dim \
+            + self.num_heads * self.head_dim * d
+        ffn = self.experts_per_token * 3 * d * self.d_ff + d * self.num_experts
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return emb + L * (attn + ffn)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: 2 layers, d_model<=512, <=4 experts, same family."""
+        d = min(self.d_model, 256)
+        hd = 64
+        heads = max(2, min(4, self.num_heads))
+        kv = 1 if self.num_kv_heads == 1 else 2
+        kw: dict[str, Any] = dict(
+            name=self.name + "-reduced",
+            num_layers=3 if self.family == "hybrid" else 2,
+            d_model=d, vocab_size=min(self.vocab_size, 512),
+            dtype="float32", param_dtype="float32", remat=False,
+        )
+        if self.family != "ssm":
+            kw.update(num_heads=heads, num_kv_heads=kv, head_dim=hd,
+                      d_ff=min(self.d_ff, 512) if self.d_ff else 0)
+        if self.is_moe:
+            kw.update(num_experts=4, num_experts_padded=4, experts_per_token=2)
+        if self.family == "ssm":
+            kw.update(ssm_state=16, ssm_headdim=32)
+        if self.family == "hybrid":
+            kw.update(lru_width=d, sliding_window=64)
+        if self.mrope:
+            kw.update(num_patch_tokens=8, head_dim=128, num_heads=2)
+        return self.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def _sds(shape, dtype, sharding=None):
+    if sharding is not None:
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this workload.
+
+    For ``decode`` kinds this covers the *step* inputs only; the cache spec
+    comes from ``repro.models.model.cache_specs`` (launch/dryrun.py combines
+    the two).  Frontend stubs (audio frames / vision patches) appear here as
+    precomputed embeddings — the one sanctioned stub.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.dtype_jnp
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            specs = {"frame_embeds": _sds((b, s, cfg.d_model), dt),
+                     "labels": _sds((b, s), jnp.int32)}
+        elif cfg.family == "vlm":
+            p = cfg.num_patch_tokens
+            specs = {"tokens": _sds((b, s - p), jnp.int32),
+                     "patch_embeds": _sds((b, p, cfg.d_model), dt),
+                     "mrope_positions": _sds((b, s, 3), jnp.int32),
+                     "labels": _sds((b, s), jnp.int32)}
+        else:
+            specs = {"tokens": _sds((b, s), jnp.int32),
+                     "labels": _sds((b, s), jnp.int32)}
+        if shape.kind == "prefill":
+            specs.pop("labels")
+        return specs
+    # decode: one new token against a cache of seq_len
+    specs = {"tokens": _sds((b, 1), jnp.int32),
+             "lengths": _sds((b,), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["mrope_positions"] = _sds((b, 1, 3), jnp.int32)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = [
+    "musicgen_large", "qwen3_moe_30b_a3b", "granite_moe_3b_a800m",
+    "deepseek_67b", "qwen2_vl_7b", "qwen3_0_6b", "stablelm_12b",
+    "qwen2_72b", "mamba2_130m", "recurrentgemma_2b",
+]
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS}
+_ALIAS.update({"dbrx": "dbrx", "dbrx-132b": "dbrx"})
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch_mod = _ALIAS.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch_mod}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,15 @@
+"""MusicGen-Large decoder backbone over EnCodec tokens [arXiv:2306.05284].
+
+48L d_model=2048 32H (kv=32 => MHA) d_ff=8192 vocab=2048.  The EnCodec
+conv/codec frontend is stubbed: input_specs() provides precomputed frame
+embeddings (B, S, d_model); the decoder predicts codec tokens.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab_size=2048,
+    act="gelu", norm="layernorm", positional="sinusoidal", use_rope=False,
+    source="arXiv:2306.05284",
+)

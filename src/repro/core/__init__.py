@@ -1,0 +1,2 @@
+from repro.core import (  # noqa: F401
+    dynamic_load, expert_parallel, moe, perf_model, prestack, router)

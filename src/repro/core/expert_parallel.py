@@ -1,0 +1,285 @@
+"""Expert-parallel execution of one MoE layer across the mesh.
+
+Three collective schedules (DESIGN.md §5):
+
+* ``centralized``   — the paper's naive organization (Fig. 3): expert inputs
+  flow through a center, 2 communications per layer.  SPMD realization:
+  token activations are sequence-sharded over the expert axis, all-gathered
+  to every expert shard (comm 1), and partial expert outputs are
+  reduce-scattered back (comm 2).
+* ``decentralized`` — the paper's P-*-D design (Fig. 7, GShard-inspired):
+  attention + router replicated over the expert axis, experts sharded, one
+  all-reduce (psum) on expert outputs per layer.
+* ``a2a``           — beyond-paper schedule: tokens stay sequence-sharded,
+  dispatch/combine use all_to_all so only top-k activations move, not the
+  full token stream.  (What modern MoE stacks do; see EXPERIMENTS.md §Perf.)
+
+When the token count cannot be split over the expert axis (single-token
+decode), ``centralized`` degrades to psum + a value-preserving ring
+``ppermute`` so the *second* communication of the centralized design is
+still present in the lowered HLO (cost-faithful; values unchanged).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import moe as moe_lib
+from repro.core import router as router_lib
+
+Array = jax.Array
+
+
+def mesh_batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+EXPERT_AXIS = "model"
+
+
+def _local_moe(cfg, experts: dict, x2d: Array, rout: router_lib.RouterOut,
+               e_start, capacity: int) -> Array:
+    if cfg.moe_strategy == "dense":
+        return moe_lib.dense_moe(experts, x2d, rout.top_idx, rout.top_w,
+                                 e_start, cfg.use_kernel)
+    return moe_lib.dispatch_moe(experts, x2d, rout.top_idx, rout.top_w,
+                                cfg.num_experts_padded, e_start, capacity,
+                                cfg.use_kernel)
+
+
+def moe_layer(cfg, mesh, layer_p: dict, x: Array) -> tuple[Array, Array]:
+    """Apply one MoE layer. x: (B, S, D) -> (y (B, S, D), aux_loss ()).
+
+    ``layer_p``: {"router": (D, E_pad), "experts": {"w_gate": (E_pad, D, F),
+    "w_up": ..., "w_down": ...}} — per-layer slices of the prestacked stack.
+    """
+    b, s, d = x.shape
+    r = max(getattr(cfg, "expert_replication", 1), 1)
+    if mesh is None or EXPERT_AXIS not in getattr(mesh, "axis_names", ()):
+        # single-shard path (smoke tests / CPU examples); with overlapping
+        # placement the stacked array carries r copies — use the first
+        experts = layer_p["experts"]
+        if r > 1:
+            experts = jax.tree.map(
+                lambda a: a[:cfg.num_experts_padded], experts)
+        x2d = x.reshape(b * s, d)
+        rout = router_lib.route(layer_p["router"], x2d, cfg.experts_per_token,
+                                norm_topk=cfg.router_norm_topk,
+                                n_valid_experts=cfg.num_experts)
+        cap = moe_lib.round_capacity(b * s, cfg.experts_per_token,
+                                     cfg.num_experts_padded,
+                                     cfg.capacity_factor)
+        y = _local_moe(cfg, experts, x2d, rout, 0, cap)
+        return y.reshape(b, s, d), rout.aux_loss
+
+    n_exp_shards = mesh.shape[EXPERT_AXIS]
+    if r > 1:
+        assert cfg.expert_parallel == "decentralized", (
+            "overlapping expert placement (paper §5.3) is implemented on "
+            "the decentralized schedule")
+        assert n_exp_shards % r == 0, (n_exp_shards, r)
+        assert (cfg.num_experts_padded * r) % n_exp_shards == 0
+    e_local = cfg.num_experts_padded * r // n_exp_shards
+    batch_axes = mesh_batch_axes(mesh)
+    # only shard the batch dim if it divides the data axes (long_500k has b=1)
+    if b % max(_axes_size(mesh, batch_axes), 1) != 0:
+        batch_axes = ()
+
+    fn = {"decentralized": _decentralized, "centralized": _centralized,
+          "a2a": _a2a}[cfg.expert_parallel]
+    return fn(cfg, mesh, layer_p, x, batch_axes, n_exp_shards, e_local)
+
+
+def _axes_size(mesh, axes) -> int:
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _expert_specs(e_axis: str) -> dict:
+    return {"w_gate": P(e_axis, None, None), "w_up": P(e_axis, None, None),
+            "w_down": P(e_axis, None, None)}
+
+
+def _route_local(cfg, layer_p, x2d):
+    return router_lib.route(layer_p_router(layer_p), x2d,
+                            cfg.experts_per_token,
+                            norm_topk=cfg.router_norm_topk,
+                            n_valid_experts=cfg.num_experts)
+
+
+def layer_p_router(layer_p):
+    return layer_p["router"]
+
+
+# ---------------------------------------------------------------------------
+# decentralized (paper Fig. 7): replicated tokens, sharded experts, one psum
+# ---------------------------------------------------------------------------
+
+def _decentralized(cfg, mesh, layer_p, x, batch_axes, n_shards, e_local):
+    """Paper Fig. 7, plus the paper's §5.3 *overlapping expert placement*:
+    with ``cfg.expert_replication = r > 1`` every expert is stored on r
+    shards (the stacked expert array carries r concatenated copies — "use
+    the extra memory to load experts overlappingly") and each replica
+    handles the 1/r token stripe ``token_idx % r == replica_id``, which is
+    how the paper distributes computation more evenly past 4 nodes."""
+    b, s, _ = x.shape
+    r = max(getattr(cfg, "expert_replication", 1), 1)
+    t_loc = max((b * s) // max(_axes_size(mesh, batch_axes), 1), 1)
+    cap = moe_lib.round_capacity(-(-t_loc // r), cfg.experts_per_token,
+                                 cfg.num_experts_padded, cfg.capacity_factor)
+    e_pad = cfg.num_experts_padded
+    n_grp = n_shards // r           # shards per expert copy
+
+    def body(router_w, experts, x_loc):
+        bl, sl, d = x_loc.shape
+        x2d = x_loc.reshape(bl * sl, d)
+        rout = router_lib.route(router_w, x2d, cfg.experts_per_token,
+                                norm_topk=cfg.router_norm_topk,
+                                n_valid_experts=cfg.num_experts)
+        idx = jax.lax.axis_index(EXPERT_AXIS)
+        if r > 1:
+            replica = idx // n_grp
+            e_start = (idx % n_grp) * e_local
+            stripe = (jnp.arange(bl * sl) % r) == replica
+            # tokens outside this replica's stripe route to a dead sentinel
+            top_idx = jnp.where(stripe[:, None], rout.top_idx, e_pad)
+            top_w = jnp.where(stripe[:, None], rout.top_w, 0.0)
+            rout = rout._replace(top_idx=top_idx.astype(jnp.int32),
+                                 top_w=top_w)
+        else:
+            e_start = idx * e_local
+        y = _local_moe(cfg, experts, x2d, rout, e_start, cap)
+        y = jax.lax.psum(y, EXPERT_AXIS)
+        aux = jax.lax.pmean(rout.aux_loss, batch_axes) if batch_axes else rout.aux_loss
+        return y.reshape(bl, sl, d), aux
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), _expert_specs(EXPERT_AXIS), P(batch_axes, None, None)),
+        out_specs=(P(batch_axes, None, None), P()),
+        check_vma=True,
+    )(layer_p["router"], layer_p["experts"], x)
+
+
+# ---------------------------------------------------------------------------
+# centralized (paper Fig. 3): 2 communications per layer
+# ---------------------------------------------------------------------------
+
+def _centralized(cfg, mesh, layer_p, x, batch_axes, n_shards, e_local):
+    b, s, d = x.shape
+    seq_shardable = s % n_shards == 0
+    t_per_batch_shard = (b // max(_axes_size(mesh, batch_axes), 1)) * s
+    cap = moe_lib.round_capacity(max(t_per_batch_shard, 1),
+                                 cfg.experts_per_token,
+                                 cfg.num_experts_padded, cfg.capacity_factor)
+
+    if seq_shardable:
+        def body(router_w, experts, x_loc):
+            bl, sl, dd = x_loc.shape
+            # comm 1: gather the full token stream to every expert shard
+            x_full = jax.lax.all_gather(x_loc, EXPERT_AXIS, axis=1, tiled=True)
+            x2d = x_full.reshape(bl * sl * n_shards, dd)
+            rout = router_lib.route(router_w, x2d, cfg.experts_per_token,
+                                    norm_topk=cfg.router_norm_topk,
+                                    n_valid_experts=cfg.num_experts)
+            e_start = jax.lax.axis_index(EXPERT_AXIS) * e_local
+            y = _local_moe(cfg, experts, x2d, rout, e_start, cap)
+            # comm 2: reduce partial sums and scatter back to sequence shards
+            y = y.reshape(bl, sl * n_shards, dd)
+            y = jax.lax.psum_scatter(y, EXPERT_AXIS, scatter_dimension=1,
+                                     tiled=True)
+            aux = jax.lax.pmean(rout.aux_loss, (EXPERT_AXIS,) + tuple(batch_axes))
+            return y, aux
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), _expert_specs(EXPERT_AXIS),
+                      P(batch_axes, EXPERT_AXIS, None)),
+            out_specs=(P(batch_axes, EXPERT_AXIS, None), P()),
+            check_vma=True,
+        )(layer_p["router"], layer_p["experts"], x)
+
+    # decode fallback: psum (comm 1) + value-preserving ring permute (comm 2)
+    def body(router_w, experts, x_loc):
+        bl, sl, dd = x_loc.shape
+        x2d = x_loc.reshape(bl * sl, dd)
+        rout = router_lib.route(router_w, x2d, cfg.experts_per_token,
+                                norm_topk=cfg.router_norm_topk,
+                                n_valid_experts=cfg.num_experts)
+        e_start = jax.lax.axis_index(EXPERT_AXIS) * e_local
+        y = _local_moe(cfg, experts, x2d, rout, e_start, cap)
+        y = jax.lax.psum(y, EXPERT_AXIS)
+        perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+        y = jax.lax.ppermute(y, EXPERT_AXIS, perm)  # identical values move
+        aux = jax.lax.pmean(rout.aux_loss, batch_axes) if batch_axes else rout.aux_loss
+        return y.reshape(bl, sl, dd), aux
+
+    # check_vma=False: the ring ppermute moves identical values, so the
+    # output *is* replicated over the expert axis, but VMA cannot prove it.
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), _expert_specs(EXPERT_AXIS), P(batch_axes, None, None)),
+        out_specs=(P(batch_axes, None, None), P()),
+        check_vma=False,
+    )(layer_p["router"], layer_p["experts"], x)
+
+
+# ---------------------------------------------------------------------------
+# a2a (beyond paper): sequence-sharded tokens + all_to_all dispatch/combine
+# ---------------------------------------------------------------------------
+
+def _a2a(cfg, mesh, layer_p, x, batch_axes, n_shards, e_local):
+    b, s, d = x.shape
+    if s % n_shards != 0:
+        # single-token decode: fall back to the decentralized schedule
+        return _decentralized(cfg, mesh, layer_p, x, batch_axes, n_shards,
+                              e_local)
+    t_loc = (b // max(_axes_size(mesh, batch_axes), 1)) * (s // n_shards)
+    # per-(source shard, expert) capacity
+    cap = moe_lib.round_capacity(max(t_loc, 1), cfg.experts_per_token,
+                                 cfg.num_experts_padded, cfg.capacity_factor)
+
+    def body(router_w, experts, x_loc):
+        bl, sl, dd = x_loc.shape
+        x2d = x_loc.reshape(bl * sl, dd)
+        rout = router_lib.route(router_w, x2d, cfg.experts_per_token,
+                                norm_topk=cfg.router_norm_topk,
+                                n_valid_experts=cfg.num_experts)
+        # build dispatch buffers for *all* experts, grouped by owner shard
+        dispatch_tok, slot_valid, slot_of = moe_lib.make_dispatch_plan(
+            rout.top_idx, cfg.num_experts_padded, 0,
+            cfg.num_experts_padded, cap)
+        xe = x2d[dispatch_tok] * slot_valid[:, None].astype(x2d.dtype)
+        xe = xe.reshape(n_shards, e_local * cap, dd)
+        # comm 1: all_to_all — shard i sends slice j to shard j
+        xe = jax.lax.all_to_all(xe, EXPERT_AXIS, split_axis=0, concat_axis=0,
+                                tiled=False)
+        # now: (n_src_shards, e_local * cap, d) of *local* experts
+        xe = xe.transpose(1, 0, 2).reshape(e_local, n_shards * cap, dd)
+        ye = moe_lib.expert_ffn(experts, xe, cfg.use_kernel)
+        # invert (e_local, cap*n_src) -> (n_src, e_local*cap) exactly
+        ye = ye.reshape(e_local, cap, n_shards, dd).transpose(2, 0, 1, 3)
+        ye = ye.reshape(n_shards, e_local * cap, dd)
+        # comm 2: all_to_all back to source shards
+        ye = jax.lax.all_to_all(ye, EXPERT_AXIS, split_axis=0, concat_axis=0,
+                                tiled=False)
+        ye = ye.reshape(n_shards * e_local * cap, dd)
+        ye_pad = jnp.concatenate([ye, jnp.zeros((1, dd), ye.dtype)], axis=0)
+        y_tk = ye_pad[slot_of]
+        y = jnp.einsum("tk,tkd->td", rout.top_w.astype(y_tk.dtype), y_tk)
+        aux = jax.lax.pmean(rout.aux_loss, (EXPERT_AXIS,) + tuple(batch_axes))
+        return y.reshape(bl, sl, dd), aux
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), _expert_specs(EXPERT_AXIS),
+                  P(batch_axes, EXPERT_AXIS, None)),
+        out_specs=(P(batch_axes, EXPERT_AXIS, None), P()),
+        check_vma=True,
+    )(layer_p["router"], layer_p["experts"], x)

@@ -1,0 +1,143 @@
+"""MoE expert execution strategies — the paper's load-balancing methods as
+static-shape TPU computations (DESIGN.md §2, §5).
+
+* ``dense``    — Busy Full Loading (L_B, paper §4.2): every expert computes
+                 every token; unselected contributions are zeroed in the
+                 weighted sum.  Zero dispatch overhead, E/k× extra FLOPs.
+* ``dispatch`` — Router-Aided Dynamic Loading (L_R, paper §4.2) adapted to
+                 SPMD: fixed-capacity dispatch.  Every shard executes an
+                 identical, statically-shaped amount of expert work (the
+                 "equalize to the max" half of L_R); token assignments above
+                 capacity are dropped, below capacity padded (the LRU
+                 freshness half is host-side, see core/dynamic_load.py).
+
+All functions here operate on *local* expert shards: ``experts`` params carry
+a leading E_local axis and ``e_start`` locates the shard in the global expert
+space.  ``core/expert_parallel.py`` wraps them in shard_map.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def round_capacity(tokens: int, k: int, num_experts: int,
+                   capacity_factor: float, multiple: int = 8) -> int:
+    """Static per-expert capacity, rounded up for MXU-friendly tiling."""
+    raw = math.ceil(tokens * k / num_experts * capacity_factor)
+    return max(multiple, math.ceil(raw / multiple) * multiple)
+
+
+def expert_ffn(experts: dict, xe: Array, use_kernel: bool = False) -> Array:
+    """Grouped SwiGLU FFN. xe: (E_local, C, D) -> (E_local, C, D).
+
+    ``use_kernel`` selects the Pallas prestacked grouped-GEMM kernel
+    (kernels/moe_gemm.py); default is the pure-jnp path (also the oracle).
+    """
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.moe_ffn(xe, experts["w_gate"], experts["w_up"],
+                           experts["w_down"])
+    g = jnp.einsum("ecd,edf->ecf", xe, experts["w_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xe, experts["w_up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(xe.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, experts["w_down"],
+                      preferred_element_type=jnp.float32).astype(xe.dtype)
+
+
+# ---------------------------------------------------------------------------
+# strategy: dense  (busy full loading, L_B)
+# ---------------------------------------------------------------------------
+
+def dense_moe(experts: dict, x: Array, top_idx: Array, top_w: Array,
+              e_start: int, use_kernel: bool = False) -> Array:
+    """x: (T, D). Every local expert computes every token; combine masks
+    out everything the router did not select.  Returns the *local partial
+    sum* (T, D) — caller psums across expert shards."""
+    e_local = experts["w_gate"].shape[0]
+    t = x.shape[0]
+    xe = jnp.broadcast_to(x[None], (e_local, t, x.shape[1]))
+    ye = expert_ffn(experts, xe, use_kernel)                # (E_local, T, D)
+    # combine weight of local expert e for token t
+    local_ids = e_start + jnp.arange(e_local)               # (E_local,)
+    sel = top_idx[None, :, :] == local_ids[:, None, None]   # (E_local, T, K)
+    w = jnp.sum(jnp.where(sel, top_w[None], 0.0), axis=-1)  # (E_local, T)
+    return jnp.einsum("et,etd->td", w.astype(ye.dtype), ye)
+
+
+# ---------------------------------------------------------------------------
+# strategy: dispatch  (capacity-based, L_R)
+# ---------------------------------------------------------------------------
+
+def make_dispatch_plan(top_idx: Array, num_experts: int, e_start: int,
+                       e_local: int, capacity: int):
+    """Compute gather/scatter indices for capacity dispatch.
+
+    Returns (dispatch_tok, slot_of, valid):
+      dispatch_tok: (E_local * C,) int32 — source token per expert slot
+                    (overflow/padding slots point at token 0 and are masked)
+      slot_valid:   (E_local * C,) bool  — slot actually holds a token
+      slot_of:      (T, K) int32 — destination slot per routing decision,
+                    == E_local*C (one-past-end) when dropped / non-local
+    """
+    t, k = top_idx.shape
+    flat_e = top_idx.reshape(-1)                            # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)                # group by expert
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(num_experts), side="left")
+    rank = jnp.arange(t * k, dtype=jnp.int32) - first[sorted_e].astype(jnp.int32)
+    is_local = (sorted_e >= e_start) & (sorted_e < e_start + e_local)
+    ok = is_local & (rank < capacity)
+    dest = (sorted_e - e_start) * capacity + rank           # (T*K,)
+    nbuf = e_local * capacity
+    dest = jnp.where(ok, dest, nbuf).astype(jnp.int32)
+
+    dispatch_tok = jnp.zeros((nbuf + 1,), jnp.int32).at[dest].set(
+        (order // k).astype(jnp.int32), mode="drop")
+    slot_valid = jnp.zeros((nbuf + 1,), jnp.bool_).at[dest].set(
+        True, mode="drop")
+    slot_of = jnp.zeros((t * k,), jnp.int32).at[order].set(dest)
+    return dispatch_tok[:nbuf], slot_valid[:nbuf], slot_of.reshape(t, k)
+
+
+def dispatch_moe(experts: dict, x: Array, top_idx: Array, top_w: Array,
+                 num_experts: int, e_start: int, capacity: int,
+                 use_kernel: bool = False) -> Array:
+    """Capacity-based dispatch on the local shard. x: (T, D) (all tokens
+    visible locally — the decentralized design of paper §4.3). Returns the
+    local partial sum (T, D); caller psums across expert shards."""
+    e_local = experts["w_gate"].shape[0]
+    t, d = x.shape
+    dispatch_tok, slot_valid, slot_of = make_dispatch_plan(
+        top_idx, num_experts, e_start, e_local, capacity)
+    xe = x[dispatch_tok] * slot_valid[:, None].astype(x.dtype)
+    xe = xe.reshape(e_local, capacity, d)
+    ye = expert_ffn(experts, xe, use_kernel).reshape(e_local * capacity, d)
+    ye_pad = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
+    y_tk = ye_pad[slot_of]                                  # (T, K, D)
+    return jnp.einsum("tk,tkd->td", top_w.astype(y_tk.dtype), y_tk)
+
+
+# ---------------------------------------------------------------------------
+# single-device reference combine (used by tests as the oracle)
+# ---------------------------------------------------------------------------
+
+def reference_moe(experts: dict, x: Array, top_idx: Array, top_w: Array) -> Array:
+    """Exact per-token top-k MoE (no capacity drops), pure gather form."""
+    t, k = top_idx.shape
+    wg, wu, wd = experts["w_gate"], experts["w_up"], experts["w_down"]
+
+    def one_tok(xt, idx, w):
+        g = jnp.einsum("d,kdf->kf", xt, wg[idx], preferred_element_type=jnp.float32)
+        u = jnp.einsum("d,kdf->kf", xt, wu[idx], preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(xt.dtype)
+        y = jnp.einsum("kf,kfd->kd", h, wd[idx], preferred_element_type=jnp.float32)
+        return jnp.einsum("k,kd->d", w, y.astype(jnp.float32)).astype(xt.dtype)
+
+    return jax.vmap(one_tok)(x, top_idx, top_w)

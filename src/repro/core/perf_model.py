@@ -1,0 +1,183 @@
+"""The paper's analytical performance model (§4.4, Eq. 1) — generalized.
+
+Per-token lower-bound inference time for an expert-parallel MoE system:
+
+    T = max(bytes_loaded / mem_bw, FLOPs / peak_flops)        (GPU term)
+      + n_layers * comm_latency + comm_bytes / comm_bw        (comm term)
+
+The module reproduces Table 1 (DBRX variable derivations), Table 6
+(estimated bounds for 2–8 Mac Studio nodes over 10 GbE), Fig. 8's RDMA NIC
+projections, and Table 5's cost-efficiency comparison.  The same equation
+parameterized with TPU v5e constants is the seed of the roofline analysis
+in benchmarks/roofline.py (compute/memory terms from the compiled HLO
+replace the napkin FLOPs/bytes; the comm term becomes the collective term).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    mem_bw: float              # bytes/sec per node
+    peak_flops: float          # FLOP/s per node (bf16)
+    comm_latency: float        # sec per communication round
+    comm_bw: float             # bytes/sec
+    price_per_node: float = 0.0  # USD
+
+
+# paper Table 1 / Table 2 / §5.5 footnotes
+M2_ULTRA_10GBE = HardwareProfile(
+    "mac-studio-10gbe", mem_bw=800e9, peak_flops=54e12,
+    comm_latency=1e-3, comm_bw=1.25e9, price_per_node=6599.0)
+M2_ULTRA_ROCE = HardwareProfile(
+    "mac-studio-rocev2", mem_bw=800e9, peak_flops=54e12,
+    comm_latency=750e-9, comm_bw=25e9 / 8, price_per_node=6599.0 + 339.0)
+M2_ULTRA_IB = HardwareProfile(
+    "mac-studio-infiniband", mem_bw=800e9, peak_flops=54e12,
+    comm_latency=600e-9, comm_bw=200e9 / 8, price_per_node=6599.0 + 1267.0)
+# target hardware of this reproduction (per-chip)
+TPU_V5E = HardwareProfile(
+    "tpu-v5e", mem_bw=819e9, peak_flops=197e12,
+    comm_latency=1e-6, comm_bw=50e9)
+# Table 5 baseline
+DGX_H100x8 = HardwareProfile(
+    "dgx-8xh100", mem_bw=8 * 3.35e12, peak_flops=8 * 989e12,
+    comm_latency=2e-6, comm_bw=450e9, price_per_node=289_000.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEWorkload:
+    """Per-token workload description (paper Table 1, derived from config)."""
+    n_layers: int
+    params_sa_bytes: float     # self-attention (+router/norm) weight bytes
+    flops_sa: float
+    params_expert_bytes: float # one expert's weight bytes (all layers)
+    flops_expert: float
+    comm_bytes: float          # all-reduce payload per token (all layers)
+
+    @classmethod
+    def from_config(cls, cfg, precision: int = 2) -> "MoEWorkload":
+        """Derive Table-1-style variables from a ModelConfig (per token)."""
+        d, L = cfg.d_model, cfg.num_layers
+        qkv_hidden = (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim
+        p_sa = (qkv_hidden * d + d * d_out_attn(cfg)) * L * precision
+        # Table 1 footnote (c): FLOPs_SA = 2 x #Params_SA where Params_SA is
+        # in BYTES — the paper's convention (14e9 for DBRX), kept verbatim
+        # for fidelity; harmless since Eq. 1 is load-bound on this hardware.
+        f_sa = 2.0 * p_sa
+        if cfg.is_moe:
+            p_e = d * cfg.d_ff * 3 * L * precision
+            f_e = 2 * d * cfg.d_ff * 3 * L
+        else:
+            p_e, f_e = d * cfg.d_ff * 3 * L * precision, 2 * d * cfg.d_ff * 3 * L
+        comm = d * 4 * L * precision
+        return cls(L, p_sa, f_sa, p_e, f_e, comm)
+
+
+def d_out_attn(cfg) -> int:
+    return cfg.num_heads * cfg.head_dim
+
+
+# paper Table 1 measured routing statistic: E[#executed experts/node/layer].
+# 2/3/4 nodes are measured (Table 1); 6/8 are the values implied by Table 6's
+# load column ((load*mem_bw - params_SA)/params_expert), since the paper
+# extrapolates them with its overlapped expert placement.
+PAPER_EXPECTED_EXPERTS = {2: 2.65, 3: 2.32, 4: 1.57, 6: 1.1125, 8: 1.0125}
+
+
+def expected_experts_per_node(num_experts: int, top_k: int, n_nodes: int,
+                              batch: int = 1) -> float:
+    """E[#distinct local experts hit per node per layer] under uniform
+    routing of ``batch`` tokens: each of the E/n local experts is selected by
+    one token w.p. k/E, so hit w.p. 1-(1-k/E)^batch.  With batch=1 this is
+    k/n — the analytic floor under the paper's measured values (Table 1's
+    2.65/2.32/1.57 include router skew and the L_R LRU top-up)."""
+    e_per_node = num_experts / n_nodes
+    p_hit = 1.0 - (1.0 - top_k / num_experts) ** batch
+    return e_per_node * p_hit
+
+
+DBRX_TABLE1 = MoEWorkload(
+    n_layers=40,
+    params_sa_bytes=7e9, flops_sa=14e9,
+    params_expert_bytes=16e9, flops_expert=16e9,
+    comm_bytes=2e6,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimate:
+    load_time: float
+    compute_time: float
+    latency_time: float
+    transfer_time: float
+
+    @property
+    def gpu_time(self) -> float:
+        return max(self.load_time, self.compute_time)
+
+    @property
+    def comm_time(self) -> float:
+        return self.latency_time + self.transfer_time
+
+    @property
+    def total(self) -> float:
+        return self.gpu_time + self.comm_time
+
+    @property
+    def throughput(self) -> float:
+        return 1.0 / self.total
+
+
+def estimate(w: MoEWorkload, hw: HardwareProfile, n_nodes: int,
+             expected_experts: float | None = None) -> Estimate:
+    """Paper Eq. (1): per-token generation lower bound on n_nodes."""
+    if expected_experts is None:
+        expected_experts = PAPER_EXPECTED_EXPERTS.get(
+            n_nodes, expected_experts_per_node(16, 4, n_nodes))
+    bytes_loaded = w.params_sa_bytes + w.params_expert_bytes * expected_experts
+    flops = w.flops_sa + w.flops_expert * expected_experts
+    return Estimate(
+        load_time=bytes_loaded / hw.mem_bw,
+        compute_time=flops / hw.peak_flops,
+        latency_time=hw.comm_latency * w.n_layers,
+        transfer_time=w.comm_bytes / hw.comm_bw,
+    )
+
+
+def scaling_table(w: MoEWorkload = DBRX_TABLE1,
+                  hw: HardwareProfile = M2_ULTRA_10GBE,
+                  nodes: tuple = (2, 3, 4, 6, 8)) -> list[dict]:
+    """Reproduces paper Table 6 (and the green triangles of Fig. 8)."""
+    rows = []
+    for n in nodes:
+        e = estimate(w, hw, n)
+        rows.append({
+            "nodes": n, "load_s": e.load_time, "comp_s": e.compute_time,
+            "lat_s": e.latency_time, "trans_s": e.transfer_time,
+            "bound_s": e.total, "tokens_per_sec": e.throughput,
+            # Table 6 prints Time rounded to 3 decimals and derives TP from
+            # the rounded value (e.g. 3 nodes: 1/0.096 = 10.4)
+            "tokens_per_sec_table6": 1.0 / round(e.total, 3),
+        })
+    return rows
+
+
+def cost_efficiency(throughput: float, n_nodes: int,
+                    hw: HardwareProfile) -> float:
+    """Table 5 metric: tokens/sec per USD of list-price hardware."""
+    return throughput / (n_nodes * hw.price_per_node)
+
+
+PAPER_TABLE5 = {
+    # solution: (n_nodes, throughput tokens/s, price/node USD)
+    "databricks-8xh100": (1, 112.5, 289_000.0),
+    "ours-2xm2ultra": (2, 5.9, 6_599.0),
+}
+
+
+def paper_table5() -> dict[str, float]:
+    return {k: tp / (n * price) for k, (n, tp, price) in PAPER_TABLE5.items()}

@@ -1,0 +1,55 @@
+"""Expert-wise weights prestacking (paper §4.1 / C2) — layout converters.
+
+The canonical parameter layout in this framework is *prestacked*: every
+weight kind is one contiguous array with leading (L[, E]) axes, scanned by
+``lax.scan`` and consumed whole by the Pallas grouped-GEMM kernel.  The
+naive layout ("unstacking", Fig. 4/5 baseline) keeps a python list of
+per-layer dicts — more HLO, more dispatches, the TPU analogue of the
+re-wiring-prone layout the paper measured on Metal.
+
+These converters are used by the checkpoint pipeline (a one-time
+preprocessing step, exactly like the paper's stacking script) and by the
+Fig. 4 benchmark.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unstack_blocks(blocks) -> list:
+    """Prestacked blocks pytree (leading L axis) -> list of per-layer trees."""
+    num_layers = jax.tree.leaves(blocks)[0].shape[0]
+    return [jax.tree.map(lambda a: a[i], blocks) for i in range(num_layers)]
+
+
+def stack_blocks(layer_list: list):
+    """List of per-layer trees -> prestacked tree with leading L axis."""
+    return jax.tree.map(lambda *a: jnp.stack(a), *layer_list)
+
+
+def stack_experts(expert_list: list) -> dict:
+    """List of per-expert {'w_gate','w_up','w_down'} -> stacked (E, ...)."""
+    return jax.tree.map(lambda *a: jnp.stack(a), *expert_list)
+
+
+def pad_experts(experts: dict, num_padded: int) -> dict:
+    """Pad the expert axis with zero (router-dead) experts — granite's
+    40 -> 48 padding (DESIGN.md §4)."""
+    e = jax.tree.leaves(experts)[0].shape[0]
+    if e == num_padded:
+        return experts
+    assert e < num_padded
+
+    def pad(a):
+        widths = [(0, num_padded - e)] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, widths)
+
+    return jax.tree.map(pad, experts)
+
+
+def validate_roundtrip(blocks) -> bool:
+    """stack(unstack(x)) == x — used by tests and the ckpt converter."""
+    rt = stack_blocks(unstack_blocks(blocks))
+    ok = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)), blocks, rt)
+    return all(jax.tree.leaves(ok))

@@ -1,0 +1,63 @@
+"""Top-k MoE router (DBRX-style) with dead-expert masking and aux loss.
+
+Dead-expert masking is how the framework handles expert counts that do not
+divide the expert-parallel axis (e.g. granite's 40 experts padded to 48):
+padded experts get -inf router logits so they are never selected, while the
+parameter layout stays uniformly shardable — a static realization of the
+paper's load-balancing theme (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class RouterOut(NamedTuple):
+    top_idx: Array      # (T, K) int32 — selected expert ids
+    top_w: Array        # (T, K) fp32 — combine weights (normalized if cfg says so)
+    probs: Array        # (T, E) fp32 — full softmax (for aux loss / stats)
+    aux_loss: Array     # () fp32 — Switch-style load-balance loss
+
+
+def route(router_w: Array, x: Array, k: int, *,
+          norm_topk: bool = True, n_valid_experts: int | None = None) -> RouterOut:
+    """x: (T, D); router_w: (D, E). Returns top-k routing decisions.
+
+    ``n_valid_experts``: if set (< E), experts >= n_valid are "dead" padding
+    and receive -inf logits.
+    """
+    e = router_w.shape[-1]
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    if n_valid_experts is not None and n_valid_experts < e:
+        dead = jnp.arange(e) >= n_valid_experts
+        logits = jnp.where(dead[None, :], -1e9, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)
+    if norm_topk:
+        top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+    aux = load_balance_loss(probs, top_idx, e)
+    return RouterOut(top_idx.astype(jnp.int32), top_w, probs, aux)
+
+
+def load_balance_loss(probs: Array, top_idx: Array, num_experts: int) -> Array:
+    """Switch-transformer aux loss, generalized to top-k."""
+    t, k = top_idx.shape
+    counts = jnp.zeros((num_experts,), jnp.float32).at[top_idx.reshape(-1)].add(1.0)
+    f = counts / (t * k)                       # dispatch fraction per expert
+    p = jnp.mean(probs, axis=0)                # mean router prob per expert
+    return num_experts * jnp.sum(f * p)
+
+
+def expected_experts_per_shard(top_idx: Array, num_experts: int,
+                               n_shards: int) -> Array:
+    """E[#distinct experts executed per shard] — the paper's Table 1 statistic
+    (``E[#exec. experts/node/layer]``), computed from routing decisions."""
+    eps = num_experts // n_shards
+    hit = jnp.zeros((num_experts,), jnp.bool_).at[top_idx.reshape(-1)].set(True)
+    per_shard = hit.reshape(n_shards, eps).sum(axis=1)
+    return jnp.mean(per_shard.astype(jnp.float32))

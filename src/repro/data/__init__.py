@@ -1,0 +1,1 @@
+from repro.data.pipeline import Pipeline, PipelineConfig, SyntheticSource, MemmapSource, shard_batch

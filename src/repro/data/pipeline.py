@@ -1,0 +1,133 @@
+"""Token data pipeline: synthetic + memmap-file sources, document packing,
+global-batch sharding.
+
+Sources
+  * ``SyntheticSource``  — deterministic pseudo-corpus (zipf-ish unigram over
+    the vocab seeded per shard); used by examples/tests so everything runs
+    offline.
+  * ``MemmapSource``     — flat .bin of uint16/uint32 token ids (the usual
+    "tokenized corpus on disk" format); zero-copy windowed reads.
+
+``Pipeline`` packs documents into fixed-length rows (next-token labels, EOS
+separated), yields numpy batches of the *global* batch size, and
+``shard_batch`` places them on the mesh with a (pod, data)-sharded batch
+axis — the on-host half of the distributed input pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+try:  # jax only needed for shard_batch
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+except Exception:  # pragma: no cover
+    jax = None
+
+
+# ---------------------------------------------------------------------------
+# sources
+# ---------------------------------------------------------------------------
+
+class SyntheticSource:
+    """Deterministic document stream: doc lengths ~ U[32, 4*seq), zipf-ish
+    unigram token distribution; reproducible per (seed, shard)."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, mean_len: int = 512):
+        self.vocab = max(vocab_size, 4)
+        self.rng = np.random.default_rng(seed)
+        self.mean_len = mean_len
+        # zipf-ish fixed unigram distribution
+        ranks = np.arange(1, self.vocab + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self.p = p / p.sum()
+
+    def documents(self) -> Iterator[np.ndarray]:
+        while True:
+            n = int(self.rng.integers(32, 4 * self.mean_len))
+            yield self.rng.choice(self.vocab, size=n, p=self.p).astype(np.int32)
+
+
+class MemmapSource:
+    """Flat binary token file. ``dtype`` uint16 for vocab<65536 else uint32."""
+
+    def __init__(self, path: str, dtype=np.uint16, doc_sep: int | None = None):
+        self.data = np.memmap(path, dtype=dtype, mode="r")
+        self.doc_sep = doc_sep
+
+    def documents(self) -> Iterator[np.ndarray]:
+        if self.doc_sep is None:
+            # treat the whole file as one stream of fixed 2048-token docs
+            step = 2048
+            while True:
+                for i in range(0, len(self.data) - step, step):
+                    yield np.asarray(self.data[i:i + step], dtype=np.int32)
+        else:
+            bounds = np.flatnonzero(self.data == self.doc_sep)
+            while True:
+                start = 0
+                for b in bounds:
+                    if b > start:
+                        yield np.asarray(self.data[start:b], dtype=np.int32)
+                    start = b + 1
+
+
+# ---------------------------------------------------------------------------
+# packing pipeline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PipelineConfig:
+    seq_len: int
+    global_batch: int
+    vocab_size: int
+    eos_id: int = 0
+    seed: int = 0
+
+
+class Pipeline:
+    """Packs documents into (global_batch, seq_len) token/label rows."""
+
+    def __init__(self, cfg: PipelineConfig, source=None):
+        self.cfg = cfg
+        self.source = source or SyntheticSource(cfg.vocab_size, cfg.seed)
+        self._docs = self.source.documents()
+        self._buf = np.zeros((0,), np.int32)
+
+    def _fill(self, n: int) -> np.ndarray:
+        parts = [self._buf]
+        have = len(self._buf)
+        while have < n:
+            d = next(self._docs)
+            parts.append(np.append(d, self.cfg.eos_id).astype(np.int32))
+            have += len(d) + 1
+        flat = np.concatenate(parts)
+        self._buf = flat[n:]
+        return flat[:n]
+
+    def next_batch(self) -> dict:
+        """Returns {"tokens": (B, S) int32, "labels": (B, S) int32} where
+        labels are next-token targets (last position predicts EOS)."""
+        b, s = self.cfg.global_batch, self.cfg.seq_len
+        flat = self._fill(b * (s + 1))
+        rows = flat.reshape(b, s + 1)
+        return {"tokens": np.ascontiguousarray(rows[:, :-1]),
+                "labels": np.ascontiguousarray(rows[:, 1:])}
+
+    def __iter__(self):
+        while True:
+            yield self.next_batch()
+
+
+def shard_batch(batch: dict, mesh, batch_axes=("pod", "data")) -> dict:
+    """Place a host numpy batch onto the mesh, batch dim sharded over the
+    data axes and everything else replicated."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def put(x):
+        spec = P(axes, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return {k: put(v) for k, v in batch.items()}

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window).
+
+The §Perf roofline log (EXPERIMENTS.md §C) shows the dominant memory term
+of long-sequence prefill is the fp32 logits chain — S²·H bytes of HBM
+traffic at the XLA level.  This kernel keeps the (bq, bk) logits tile and
+the online-softmax stats in VMEM and only ever writes the (bq, hd) output
+accumulator, which removes that term on real TPU.
+
+  grid = (B·H, S/bq, S/bk)   — k innermost, accumulating in VMEM scratch
+  q   : (BH, S, hd)  block (1, bq, hd)
+  k/v : (BH, S, hd)  block (1, bk, hd)
+  out : (BH, S, hd)  block (1, bq, hd), written on the last k step
+
+VMEM working set (bq=256, bk=512, hd=128, bf16):
+  q 64 KB + k/v 2×128 KB + logits tile 512 KB (f32) + acc 128 KB ≈ 1 MB.
+
+Validated against kernels/ref.py (and models/attention.attend_chunked)
+in interpret mode on CPU; TPU is the deployment target.  Fully-masked
+(bq, bk) tiles above the causal diagonal are still visited — a block-
+sparse grid skip is a known further optimization, not needed for
+correctness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, n_k: int, bq: int, bk: int, scale: float,
+            window: int | None, causal: bool):
+    kstep = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(kstep == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                    # (bq, hd)
+    k = k_ref[0]                                    # (bk, hd)
+    v = v_ref[0]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kstep * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]                             # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)                     # (bq, bk)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)                  # (bq, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kstep == n_k - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_q", "block_k", "causal", "window", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 256, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q/k/v: (B, H, S, hd) -> (B, H, S, hd). S padded to block multiples
+    (zero-padded keys are masked by the causal/window mask; padded queries
+    are sliced off)."""
+    b, h, s, hd = q.shape
+    bq, bk = min(block_q, s), min(block_k, s)
+    sq = (s + bq - 1) // bq * bq
+    sk = (s + bk - 1) // bk * bk
+    sp = max(sq, sk)
+    sp = (sp + max(bq, bk) - 1) // max(bq, bk) * max(bq, bk)
+
+    def pad_to(x, target):
+        return (x if x.shape[2] == target else
+                jnp.pad(x, ((0, 0), (0, 0), (0, target - x.shape[2]),
+                            (0, 0))))
+
+    qp = pad_to(q, sp).reshape(b * h, sp, hd)
+    kp = pad_to(k, sp).reshape(b * h, sp, hd)
+    vp = pad_to(v, sp).reshape(b * h, sp, hd)
+    n_q, n_k = sp // bq, sp // bk
+    scale = hd ** -0.5
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, bq=bq, bk=bk, scale=scale,
+                          window=window, causal=causal),
+        grid=(b * h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out.reshape(b, h, sp, hd)[:, :, :s]

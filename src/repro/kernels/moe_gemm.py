@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: prestacked grouped expert FFN (SwiGLU).
+
+The paper's prestacking (C2) made expert weights one contiguous array so the
+runtime never re-prepares them; on TPU the same layout lets a single kernel
+stream every expert's tiles HBM->VMEM with no per-expert dispatch.  This
+kernel fuses the whole expert FFN  y = (silu(x Wg) * (x Wu)) Wd  for a batch
+of experts:
+
+  grid = (E, C/bc, F/bf)   — f innermost, accumulating into a VMEM scratch
+  x   : (E, C, D)  block (1, bc, D)
+  Wg/Wu: (E, D, F) block (1, D, bf)       } MXU-aligned tiles
+  Wd  : (E, F, D)  block (1, bf, D)
+  out : (E, C, D)  block (1, bc, D), written on the last f step
+
+VMEM working set (bc=128, bf=256, D=2048, bf16):
+  x 0.5 MB + Wg/Wu 2x1 MB + Wd 1 MB + fp32 acc 1 MB ~= 4.5 MB  << 16 MB.
+
+Validated against kernels/ref.py in interpret mode (CPU) over a
+shape/dtype sweep; TPU is the deployment target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, n_f: int):
+    f = pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                   # (bc, D)
+    g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)       # (bc, bf)
+    acc_ref[...] += jnp.dot(h, wd_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(f == n_f - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "interpret"))
+def moe_ffn_kernel(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                   w_down: jax.Array, *, block_c: int = 128,
+                   block_f: int = 256, interpret: bool = False) -> jax.Array:
+    """x: (E, C, D); w_gate/w_up: (E, D, F); w_down: (E, F, D) -> (E, C, D).
+
+    C and F are padded up to the block sizes (zero padding is exact for this
+    FFN: silu(0)*0 = 0 and zero Wd rows contribute nothing).
+    """
+    e, c, d = x.shape
+    f = w_gate.shape[-1]
+    bc, bf = min(block_c, c), min(block_f, f)
+    cp = (c + bc - 1) // bc * bc
+    fp = (f + bf - 1) // bf * bf
+    if cp != c:
+        x = jnp.pad(x, ((0, 0), (0, cp - c), (0, 0)))
+    if fp != f:
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, 0), (0, fp - f)))
+        w_up = jnp.pad(w_up, ((0, 0), (0, 0), (0, fp - f)))
+        w_down = jnp.pad(w_down, ((0, 0), (0, fp - f), (0, 0)))
+    n_c, n_f = cp // bc, fp // bf
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_f=n_f),
+        grid=(e, n_c, n_f),
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e_, c_, f_: (e_, c_, 0)),
+            pl.BlockSpec((1, d, bf), lambda e_, c_, f_: (e_, 0, f_)),
+            pl.BlockSpec((1, d, bf), lambda e_, c_, f_: (e_, 0, f_)),
+            pl.BlockSpec((1, bf, d), lambda e_, c_, f_: (e_, f_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e_, c_, f_: (e_, c_, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)
+    return out[:, :c, :]

@@ -1,0 +1,36 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode so the whole
+framework remains runnable/testable; on TPU the same call sites compile the
+real kernels.  ``interpret`` is resolved from the backend at trace time.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attn, moe_gemm, ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def moe_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+            w_down: jax.Array) -> jax.Array:
+    """Prestacked grouped expert FFN (E, C, D) -> (E, C, D)."""
+    return moe_gemm.moe_ffn_kernel(x, w_gate, w_up, w_down,
+                                   interpret=_interpret())
+
+
+moe_ffn_ref = ref.moe_ffn_ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=256, block_k=512):
+    """Flash attention (B, H, S, hd) -> (B, H, S, hd)."""
+    return flash_attn.flash_attention(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=_interpret())
+
+
+flash_attention_ref = ref.flash_attention_ref

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: int | None = None) -> jax.Array:
+    """Dense masked attention oracle. q/k/v: (B, H, S, hd) -> (B, H, S, hd)."""
+    s = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), jnp.bool_)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window is not None:
+        mask = mask & (kp > qp - window)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def moe_ffn_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                w_down: jax.Array) -> jax.Array:
+    """Grouped SwiGLU expert FFN. x: (E, C, D) -> (E, C, D)."""
+    g = jnp.einsum("ecd,edf->ecf", x, w_gate,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", x, w_up,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, w_down,
+                      preferred_element_type=jnp.float32).astype(x.dtype)

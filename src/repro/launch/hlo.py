@@ -1,0 +1,373 @@
+"""HLO-text analysis for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` visits each computation ONCE — a
+``lax.scan`` over L layers reports 1/L of the real FLOPs (verified
+empirically on the CPU backend).  This module re-derives roofline inputs
+from ``compiled.as_text()`` *with while-loop trip-count multipliers*:
+
+  * ``flops``            — 2·prod(result)·prod(contracting dims) per dot,
+    trip-multiplied through nested while loops;
+  * ``bytes``            — Σ (operand + result bytes) over top-level
+    instructions (fusions counted at the call site = post-fusion HBM
+    traffic; fusion bodies and to_apply regions are not traversed);
+  * ``collective_bytes`` — per collective kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute), operand bytes,
+    trip-multiplied.  All numbers are PER-DEVICE (the module is SPMD).
+
+Scheduled HLO does not inline operand shapes, so the parser keeps a
+per-computation symbol table (instruction -> result shapes) and resolves
+operands through it.  Trip counts come from the integer constants in each
+while condition (a scan condition is ``i < L``); nested loops multiply.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops whose operand/result bytes are control flow, not HBM traffic
+_NO_BYTES = ("parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "conditional", "call", "after-all", "partition-id",
+             "replica-id", "custom-call", "copy-start", "copy-done",
+             "add-dependency", "domain", "opt-barrier")
+# ops that represent real HBM traffic on a TPU build (dots, fused kernels,
+# data movement).  Standalone elementwise ops / converts / broadcasts are
+# excluded from the HBM estimate: the TPU backend fuses them into neighbours
+# while the CPU backend leaves many of them unfused, which would bill each
+# at HBM cost and overstate the memory roofline term by an order of
+# magnitude (verified on qwen2-72b train: raw 431 s vs compute 15 s).
+_HBM_OPS = ("dot", "convolution", "fusion", "dynamic-slice",
+            "dynamic-update-slice", "gather", "scatter", "copy",
+            "concatenate", "pad", "reduce", "reduce-window", "sort",
+            "transpose", "reshape", "slice", "select-and-scatter",
+            "rng", "rng-bit-generator", "iota", "cholesky",
+            "triangular-solve")
+
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s*([a-z][\w\-]*)\((.*)$")
+_WHILE_ATTR = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_ATTR = re.compile(r"to_apply=%?([\w\.\-]+)")
+_FUSION_ATTR = re.compile(r"calls=%?([\w\.\-]+)")
+_BRANCH_ATTR = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_ATTR = re.compile(r"true_computation=%?([\w\.\-]+),\s*"
+                      r"false_computation=%?([\w\.\-]+)")
+_FUSION_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    return _shape_elems(dims) * _DTYPE_BYTES[dtype]
+
+
+def _shapes_bytes(shapes) -> float:
+    return float(sum(shape_bytes(dt, d) for dt, d in shapes))
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    flops: float = 0.0
+    bytes: float = 0.0
+    hbm_bytes: float = 0.0       # _HBM_OPS only — the TPU traffic estimate
+    convert_bytes: float = 0.0   # dtype-convert traffic (CPU bf16 upcasts)
+    coll: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    whiles: list = dataclasses.field(default_factory=list)  # (body, cond)
+    calls: list = dataclasses.field(default_factory=list)
+    max_const: int = 1
+    has_ds: bool = False         # body contains dynamic-slice
+    has_dus: bool = False        # body contains dynamic-update-slice
+
+
+def _split_operands(rest: str) -> list[str]:
+    """Names referenced inside the operand parens (up to the matching ')')."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return _OPERAND_RE.findall(rest[:i])
+    return _OPERAND_RE.findall(rest)
+
+
+def parse(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    symtab: dict[str, list] = {}
+    entry_name = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith(("//", "#")):
+            continue
+        mh = _COMP_HEAD.match(line)
+        if mh and line.endswith("{"):
+            cur = Computation(mh.group(2), is_entry=bool(mh.group(1)))
+            comps[cur.name] = cur
+            symtab = {}
+            if cur.is_entry:
+                entry_name = cur.name
+            continue
+        if line.startswith("}") or cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, result_part, opcode, rest = mi.groups()
+        result_shapes = _SHAPE_RE.findall(result_part)
+        symtab[name] = result_shapes
+        for mc in _CONST_RE.finditer(line):
+            cur.max_const = max(cur.max_const, int(mc.group(1)))
+        if opcode == "while":
+            mw = _WHILE_ATTR.search(rest)
+            if mw:
+                cur.whiles.append((mw.group(2), mw.group(1)))
+            continue
+        if opcode == "call":
+            mc2 = _CALL_ATTR.search(rest)
+            if mc2:
+                cur.calls.append(mc2.group(1))
+            continue
+        if opcode == "conditional":
+            mb = _BRANCH_ATTR.search(rest)
+            if mb:
+                cur.calls.extend(t.strip().lstrip("%") for t in
+                                 mb.group(1).split(",") if t.strip())
+            else:
+                mtf = _TF_ATTR.search(rest)
+                if mtf:
+                    cur.calls.extend(mtf.groups())
+            continue
+
+        if "dynamic-slice(" in line:
+            cur.has_ds = True
+        if "dynamic-update-slice(" in line:
+            cur.has_dus = True
+
+        operand_names = _split_operands(rest)
+        operand_shapes = [s for o in operand_names for s in symtab.get(o, [])]
+
+        base = opcode.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES or opcode in _COLLECTIVES:
+            nb = _shapes_bytes(operand_shapes)
+            if nb == 0:  # -done ops reference the -start tuple
+                nb = _shapes_bytes(result_shapes)
+            if not opcode.endswith("-done"):
+                cur.coll[base] += nb
+                cur.bytes += nb + _shapes_bytes(result_shapes)
+            continue
+        if opcode in _NO_BYTES:
+            continue
+        all_shapes = result_shapes + operand_shapes
+        nb = _shapes_bytes(all_shapes)
+        effective = opcode
+        callee_flags = (False, False)
+        if opcode == "fusion":
+            # CPU wraps single ops as %wrapped_<op> fusions — classify by
+            # the wrapped op so e.g. wrapped_convert is not billed as HBM
+            mf = _FUSION_CALLS_RE.search(rest)
+            if mf:
+                mw = re.match(r"wrapped_([a-z\-_]+?)(?:_computation)?$",
+                              mf.group(1))
+                if mw:
+                    effective = mw.group(1).replace("_", "-")
+                body = comps.get(mf.group(1))
+                if body is not None:
+                    callee_flags = (body.has_ds, body.has_dus)
+        # scan-style windowed accesses: a dynamic-slice reads only the slice
+        # (not the whole stacked operand) and a dynamic-update-slice writes
+        # in place — bill the window, not the full (L, ...) array, otherwise
+        # every lax.scan layer step is charged the entire weight/cache stack
+        is_ds = effective == "dynamic-slice" or callee_flags[0]
+        is_dus = effective == "dynamic-update-slice" or callee_flags[1]
+        if (is_ds or is_dus) and all_shapes:
+            biggest = max(shape_bytes(dt, d) for dt, d in all_shapes)
+            drop = 2 * biggest if is_dus else biggest
+            nb = max(nb - drop, min(shape_bytes(dt, d)
+                                    for dt, d in all_shapes))
+        cur.bytes += nb
+        if effective in _HBM_OPS:
+            cur.hbm_bytes += nb
+        if effective == "convert":
+            cur.convert_bytes += nb
+        if opcode == "dot":
+            mct = _CONTRACT_RE.search(rest)
+            lhs = symtab.get(operand_names[0], []) if operand_names else []
+            if mct and lhs:
+                lhs_dims = ([int(x) for x in lhs[0][1].split(",")]
+                            if lhs[0][1] else [])
+                cprod = 1
+                for cd in (int(x) for x in mct.group(1).split(",") if x):
+                    if cd < len(lhs_dims):
+                        cprod *= lhs_dims[cd]
+                rprod = 1
+                for dt, dims in result_shapes:
+                    rprod *= _shape_elems(dims)
+                cur.flops += 2.0 * rprod * cprod
+
+    comps["__entry__"] = comps.get(entry_name, Computation("none"))
+    return comps
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    convert_bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.coll.values()))
+
+    @property
+    def bytes_tpu_est(self) -> float:
+        """HBM traffic with dtype-convert ops removed — on TPU the bf16
+        operands feed the MXU directly; the CPU backend's wholesale
+        bf16->f32 upcasts (and their hoisted buffers) do not exist there."""
+        return self.bytes - self.convert_bytes
+
+
+def breakdown(hlo_text: str, top: int = 20) -> list[tuple[str, float, float]]:
+    """Top HBM-byte contributors as (opcode@result_shape, bytes, flops),
+    trip-multiplied — the dry-run 'profile' used by the §Perf loop."""
+    items: dict[str, list] = {}
+    comps: dict[str, Computation] = {}
+    cur = None
+    symtab: dict[str, list] = {}
+    trip_of: dict[str, float] = {}
+    # pass 1: parse computations again, but track per-instruction keys
+    per_comp_items: dict[str, dict] = {}
+    flags: dict[str, tuple] = {}
+    cur_flags = [False, False]
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        mh = _COMP_HEAD.match(line)
+        if mh and line.endswith("{"):
+            cur = mh.group(2)
+            per_comp_items[cur] = {}
+            symtab = {}
+            cur_flags = [False, False]
+            flags[cur] = cur_flags
+            continue
+        if line.startswith("}") or cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, result_part, opcode, rest = mi.groups()
+        result_shapes = _SHAPE_RE.findall(result_part)
+        symtab[name] = result_shapes
+        if "dynamic-slice(" in line:
+            cur_flags[0] = True
+        if "dynamic-update-slice(" in line:
+            cur_flags[1] = True
+        if opcode in _NO_BYTES or opcode in ("while", "call", "conditional"):
+            continue
+        operand_names = _split_operands(rest)
+        operand_shapes = [s for o in operand_names for s in symtab.get(o, [])]
+        all_shapes = result_shapes + operand_shapes
+        nb = _shapes_bytes(all_shapes)
+        is_ds = opcode == "dynamic-slice"
+        is_dus = opcode == "dynamic-update-slice"
+        if opcode == "fusion":
+            mf = _FUSION_CALLS_RE.search(rest)
+            if mf and mf.group(1) in flags:
+                is_ds = is_ds or flags[mf.group(1)][0]
+                is_dus = is_dus or flags[mf.group(1)][1]
+        if (is_ds or is_dus) and all_shapes:
+            biggest = max(shape_bytes(dt, d) for dt, d in all_shapes)
+            drop = 2 * biggest if is_dus else biggest
+            nb = max(nb - drop, min(shape_bytes(dt, d)
+                                    for dt, d in all_shapes))
+        key = opcode + "@" + (
+            result_shapes[0][0] + "[" + result_shapes[0][1] + "]"
+            if result_shapes else "?")
+        d = per_comp_items[cur].setdefault(key, [0.0, 0.0])
+        d[0] += nb
+
+    # pass 2: reuse parse() for the call graph / trip counts
+    comps = parse(hlo_text)
+    entry = comps["__entry__"].name
+    mult: dict[str, float] = {entry: 1.0}
+
+    def spread(name, m, stack=()):
+        if name not in comps or name in stack:
+            return
+        c = comps[name]
+        for callee in c.calls:
+            mult[callee] = mult.get(callee, 0.0) + m
+            spread(callee, m, stack + (name,))
+        for body, cond in c.whiles:
+            trip = comps[cond].max_const if cond in comps else 1
+            mult[body] = mult.get(body, 0.0) + m * trip
+            spread(body, m * trip, stack + (name,))
+
+    spread(entry, 1.0)
+    agg: dict[str, float] = {}
+    for comp, it in per_comp_items.items():
+        m = mult.get(comp, 0.0)
+        if m <= 0:
+            continue
+        for key, (nb, _) in it.items():
+            agg[key] = agg.get(key, 0.0) + nb * m
+    ranked = sorted(agg.items(), key=lambda kv: -kv[1])[:top]
+    return [(k, v, 0.0) for k, v in ranked]
+
+
+def analyze(hlo_text: str) -> Totals:
+    comps = parse(hlo_text)
+    entry = comps["__entry__"]
+    memo: dict[str, Totals] = {}
+
+    def walk(name: str, stack=()) -> Totals:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return Totals()
+        c = comps[name]
+        t = Totals(c.flops, c.bytes, c.hbm_bytes, c.convert_bytes,
+                   defaultdict(float, c.coll))
+        for callee in c.calls:
+            sub = walk(callee, stack + (name,))
+            t.flops += sub.flops
+            t.bytes += sub.bytes
+            t.hbm_bytes += sub.hbm_bytes
+            t.convert_bytes += sub.convert_bytes
+            for k, v in sub.coll.items():
+                t.coll[k] += v
+        for body, cond in c.whiles:
+            trip = comps[cond].max_const if cond in comps else 1
+            sub = walk(body, stack + (name,))
+            t.flops += trip * sub.flops
+            t.bytes += trip * sub.bytes
+            t.hbm_bytes += trip * sub.hbm_bytes
+            t.convert_bytes += trip * sub.convert_bytes
+            for k, v in sub.coll.items():
+                t.coll[k] += trip * v
+        memo[name] = t
+        return t
+
+    return walk(entry.name)

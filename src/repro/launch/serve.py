@@ -1,0 +1,64 @@
+"""Serving launcher: batched prefill+decode through the ServingEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
+        --reduced --requests 8 --new-tokens 16
+
+Reports the paper's §5.2-style breakdown: prompt-evaluation and
+token-generation throughput, plus the measured E[#exec experts/node/layer]
+statistic that feeds the perf model (Table 1).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import perf_model
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
+               max_batch: int = 4, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    eng = ServingEngine(cfg, EngineConfig(
+        max_batch=max_batch, prefill_len=prompt_len,
+        max_cache=prompt_len + new_tokens + 8))
+    for _ in range(requests):
+        plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
+        eng.submit(rng.integers(0, cfg.vocab_size, plen), new_tokens)
+    done = eng.run_until_done()
+    tp = eng.throughput()
+    print(f"completed {len(done)} requests")
+    print(f"prompt-eval throughput : {tp['prefill_tok_per_s']:.1f} tok/s")
+    print(f"generation throughput  : {tp['decode_tok_per_s']:.1f} tok/s")
+    if cfg.is_moe:
+        for n in (2, 3, 4):
+            e = eng.expected_experts_per_node(n)
+            est = perf_model.estimate(
+                perf_model.MoEWorkload.from_config(cfg),
+                perf_model.M2_ULTRA_10GBE, n, expected_experts=e)
+            print(f"E[#exec experts/node/layer] @ {n} nodes: {e:.2f}  "
+                  f"(paper-model bound {est.throughput:.1f} tok/s)")
+    return eng, done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    serve_demo(cfg, requests=args.requests, new_tokens=args.new_tokens,
+               prompt_len=args.prompt_len, max_batch=args.max_batch)
+
+
+if __name__ == "__main__":
+    main()

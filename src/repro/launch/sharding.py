@@ -1,0 +1,188 @@
+"""Per-architecture PartitionSpec rules for params, optimizer state, inputs
+and caches on the (pod, data, model) production mesh.
+
+Two parameter modes:
+  * ``train`` — FSDP-style: tensor-parallel dim over "model", plus the
+    d_model (or another large) dim over "data" so gradients + AdamW moments
+    fit HBM; weights are all-gathered per layer by GSPMD/shard_map (the
+    standard ZeRO-3 schedule).
+  * ``serve`` — weights sharded over "model" only and replicated over the
+    batch axes (fast per-step access, no per-layer gathers).
+
+Expert weights always carry the expert axis on "model" — the paper's expert
+parallelism (DESIGN.md §5) — matching core/expert_parallel's shard_map
+in_specs.  Divisibility fallbacks (replicate when a dim does not divide the
+axis) are the granite-40-experts / qwen2-vl-28-heads cases from DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+
+
+def _dim_ok(size: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and size % mesh.shape[axis] == 0
+
+
+def _spec(ndim: int, **at) -> P:
+    """Build a PartitionSpec of rank ``ndim`` with axes at given positions,
+    e.g. _spec(3, **{'2': 'model'}) -> P(None, None, 'model')."""
+    out = [None] * ndim
+    for pos, ax in at.items():
+        out[int(pos)] = ax
+    return P(*out)
+
+
+def params_pspec(cfg, mesh, params, mode: str = "train"):
+    """PartitionSpec pytree matching ``params``. ``mode``: train | serve."""
+    tp = "model"
+    fsdp = "data" if (mode == "train" and "data" in mesh.axis_names) else None
+
+    def rule(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        nd = leaf.ndim
+        shape = leaf.shape
+        in_experts = "experts" in names
+        in_attn = "attn" in names or (names[-2:-1] == ["mix"])
+        sub = lambda **kw: _spec(nd, **kw)
+
+        if name == "embed":                       # (Vpad, D)
+            return P(tp, fsdp)
+        if name == "lm_head":                     # (D, Vpad)
+            return P(fsdp, tp)
+        if in_experts:                            # (L, E, D, F) / (L, E, F, D)
+            if name in ("w_gate", "w_up"):
+                dd = shape[2]
+                return P(None, tp, fsdp if _dim_ok(dd, mesh, "data") and fsdp else None, None)
+            if name == "w_down":
+                dd = shape[3]
+                return P(None, tp, None, fsdp if _dim_ok(dd, mesh, "data") and fsdp else None)
+            return sub()
+        if name == "router":                      # (L, D, E)
+            return sub(**({"1": fsdp} if fsdp and _dim_ok(shape[1], mesh, "data") else {}))
+        if name in ("wq", "wk", "wv"):            # (L, D, H*hd)
+            heads = cfg.num_heads if name == "wq" else cfg.num_kv_heads
+            at = {}
+            if fsdp and _dim_ok(shape[1], mesh, "data"):
+                at["1"] = fsdp
+            if heads and heads % mesh.shape[tp] == 0:
+                at["2"] = tp
+            elif (mode == "serve" and name in ("wk", "wv")
+                  and _dim_ok(shape[2], mesh, tp)):
+                # serve mode: kv heads may not divide the axis (GQA kv=8 on
+                # tp=16) but the flattened Hkv*hd dim does — shard it rather
+                # than replicate 2-3 GB of kv weights per device; CP decode
+                # gathers only the per-token k/v (KBs), not the weights
+                at["2"] = tp
+            return sub(**at)
+        if name == "wo":                          # (L, H*hd, D)
+            at = {}
+            if cfg.num_heads and cfg.num_heads % mesh.shape[tp] == 0:
+                at["1"] = tp
+            if fsdp and _dim_ok(shape[2], mesh, "data"):
+                at["2"] = fsdp
+            return sub(**at)
+        if name in ("w_gate", "w_up"):            # (L, D, F) dense mlp
+            at = {}
+            if fsdp and _dim_ok(shape[1], mesh, "data"):
+                at["1"] = fsdp
+            if _dim_ok(shape[2], mesh, tp):
+                at["2"] = tp
+            return sub(**at)
+        if name == "w_down":                      # (L, F, D)
+            at = {}
+            if _dim_ok(shape[1], mesh, tp):
+                at["1"] = tp
+            if fsdp and _dim_ok(shape[2], mesh, "data"):
+                at["2"] = fsdp
+            return sub(**at)
+        # mamba2 projections
+        if name == "in_proj":                     # (L, D, Z) ragged out dim
+            return sub(**({"1": fsdp} if fsdp and _dim_ok(shape[1], mesh, "data") else {}))
+        if name == "out_proj":                    # (L, di, D)
+            return sub(**({"2": fsdp} if fsdp and _dim_ok(shape[2], mesh, "data") else {}))
+        # rg-lru
+        if name in ("in_x", "in_y"):              # (L, D, W)
+            at = {}
+            if fsdp and _dim_ok(shape[1], mesh, "data"):
+                at["1"] = fsdp
+            if _dim_ok(shape[2], mesh, tp):
+                at["2"] = tp
+            return sub(**at)
+        if name in ("gate_a", "gate_x"):          # (L, W, W)
+            return sub(**({"2": tp} if _dim_ok(shape[2], mesh, tp) else {}))
+        if name == "out":                         # (L, W, D)
+            at = {}
+            if _dim_ok(shape[1], mesh, tp):
+                at["1"] = tp
+            if fsdp and _dim_ok(shape[2], mesh, "data"):
+                at["2"] = fsdp
+            return sub(**at)
+        # norms, biases, conv kernels, Lambda, A_log, D, dt_bias, scalars
+        return sub()
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def opt_pspec(cfg, mesh, opt_state, params_spec):
+    """AdamW state: moments shard like params, step replicated."""
+    return type(opt_state)(P(), params_spec, params_spec)
+
+
+def batch_pspec(cfg, mesh, batch: dict) -> dict:
+    """Global batch: leading dim over the data axes when divisible."""
+    ba = mesh_lib.batch_axes(mesh)
+    nb = mesh_lib.axes_size(mesh, ba)
+
+    def per(v):
+        b = v.shape[0]
+        ax = ba if (nb and b % nb == 0) else ()
+        return _spec(v.ndim, **{"0": ax}) if ax else _spec(v.ndim)
+
+    return {k: per(v) for k, v in batch.items()}
+
+
+def cache_pspec(cfg, mesh, cache) -> dict:
+    """KV / state caches: (L, B, S, Hkv, hd) — batch over data axes, plus one
+    "model"-axis dim chosen by ``cfg.kv_cache_shard``:
+
+      * ``hd``  — shard the head dim (default): decode attention keeps the
+        cache update local and turns the QK contraction into a psum;
+      * ``seq`` — decode-time context parallelism over the cache length
+        (forces a gather/reshard around the attention in GSPMD);
+      * ``kv``  — shard kv heads (only when H_kv divides the axis);
+      * ``none``— batch-only.
+
+    SSM / conv states are batch-sharded only."""
+    ba = mesh_lib.batch_axes(mesh)
+    nb = mesh_lib.axes_size(mesh, ba)
+    mode = getattr(cfg, "kv_cache_shard", "hd")
+
+    def rule(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        nd = leaf.ndim
+        b = leaf.shape[1] if nd >= 2 else 0
+        bax = ba if (nb and b % nb == 0) else ()
+        at = {}
+        if bax:
+            at["1"] = bax
+        if name in ("k", "v") and nd == 5:
+            dim = {"seq": 2, "kv": 3, "hd": 4}.get(mode)
+            if dim is not None and _dim_ok(leaf.shape[dim], mesh, "model"):
+                at[str(dim)] = "model"
+        if name in ("k_scale", "v_scale") and nd == 5 and mode == "seq" \
+                and _dim_ok(leaf.shape[2], mesh, "model"):
+            at["2"] = "model"
+        return _spec(nd, **at)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

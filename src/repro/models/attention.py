@@ -1,0 +1,495 @@
+"""GQA attention with causal / sliding-window masking and a KV cache.
+
+Three entry points share one core:
+  * ``attend(q, k, v, ...)``       — masked SDPA, fp32 softmax
+  * ``attn_forward(...)``          — train / prefill over a full sequence
+  * ``attn_decode_step(...)``      — one new token against a cache
+
+Cache layout (per layer): ``k``/``v`` of shape (B, S_max, H_kv, hd) plus a
+shared per-sequence ``lengths`` (B,) kept at the model level.  For sliding
+window attention the cache is a ring buffer of size ``window`` and positions
+are stored modulo the window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Array = jax.Array
+NEG_INF = -1e9  # large-negative instead of -inf: keeps softmax NaN-free on fully-masked rows
+
+
+def gqa_repeat(k: Array, q_heads: int) -> Array:
+    """(..., H_kv, hd) -> (..., H_q, hd) by repeating each kv head."""
+    kv_heads = k.shape[-2]
+    if kv_heads == q_heads:
+        return k
+    rep = q_heads // kv_heads
+    return jnp.repeat(k, rep, axis=-2)
+
+
+def attend(q: Array, k: Array, v: Array, mask: Array, scale: float) -> Array:
+    """q: (B,Sq,Hq,hd) k/v: (B,Sk,Hq,hd) mask: (B,1,Sq,Sk) bool -> (B,Sq,Hq,hd)."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention — O(S) memory for long sequences
+# ---------------------------------------------------------------------------
+
+CHUNK_THRESHOLD = 2048   # switch to chunked attention at/above this S
+# K/V are re-read once per q-chunk, so total k/v HBM traffic scales with
+# S/Q_CHUNK: larger q-chunks amortize the K pass (measured 2x memory-term
+# win on deepseek-67b prefill_32k going 512 -> 2048)
+Q_CHUNK = 2048
+K_CHUNK = 1024
+
+
+def attend_chunked(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                   window: int | None, scale: float,
+                   q_chunk: int = Q_CHUNK, k_chunk: int = K_CHUNK) -> Array:
+    """Online-softmax attention, never materializing (Sq, Sk) logits.
+
+    q: (B,Sq,H,hd); k/v: (B,Sk,H,hd); q_pos: (B,Sq); k_pos: (B,Sk).
+    Causal (k_pos <= q_pos) with optional sliding ``window``.  This is the
+    pure-JAX oracle of the Pallas flash kernel (kernels/flash_attn.py) and
+    the long-sequence path used by train/prefill.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    qc = min(q_chunk, sq)
+    kc = min(k_chunk, sk)
+    nq, nk = -(-sq // qc), -(-sk // kc)
+    # pad to chunk multiples (positions padded with -1 / huge so masks kill them)
+    qp = jnp.pad(q, ((0, 0), (0, nq * qc - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kc - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kc - sk), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, ((0, 0), (0, nq * qc - sq)), constant_values=-1)
+    kpos = jnp.pad(k_pos, ((0, 0), (0, nk * kc - sk)),
+                   constant_values=2**30)
+
+    qp = qp.reshape(b, nq, qc, h, hd).transpose(1, 0, 2, 3, 4)
+    qpos_c = qpos.reshape(b, nq, qc).transpose(1, 0, 2)
+    # pre-transpose k/v ONCE into MXU-operand layout — doing it inside the
+    # q-loop re-transposes every k-chunk nq times (measured 50% of prefill
+    # HBM traffic on deepseek-67b before this hoist)
+    kp = kp.reshape(b, nk, kc, h, hd).transpose(1, 0, 3, 4, 2)  # (nk,B,H,hd,kc)
+    vp = vp.reshape(b, nk, kc, h, hd).transpose(1, 0, 3, 2, 4)  # (nk,B,H,kc,hd)
+    kpos_c = kpos.reshape(b, nk, kc).transpose(1, 0, 2)
+
+    def q_block(args):
+        qb, qpb = args                       # (B,qc,H,hd), (B,qc)
+        qbt = qb.transpose(0, 2, 1, 3)       # (B,H,qc,hd) once per q-chunk
+
+        def k_step(carry, kargs):
+            acc, m, l = carry
+            kb, vb, kpb = kargs              # (B,H,hd,kc), (B,H,kc,hd), (B,kc)
+            logit = jnp.einsum("bhqd,bhdk->bhqk", qbt, kb,
+                               preferred_element_type=jnp.float32) * scale
+            msk = kpb[:, None, None, :] <= qpb[:, None, :, None]
+            if window is not None:
+                msk = msk & (kpb[:, None, None, :]
+                             > qpb[:, None, :, None] - window)
+            logit = jnp.where(msk, logit, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logit, axis=-1))
+            p = jnp.exp(logit - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, h, qc, hd), jnp.float32)
+        m0 = jnp.full((b, h, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(k_step, (acc0, m0, l0),
+                                      (kp, vp, kpos_c))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B,qc,H,hd)
+
+    # checkpoint each q-block: the inner k-scan's per-step residuals
+    # (logits/probs stacks of shape (nq, nk, B, H, qc, kc)) are recomputed
+    # in the backward instead of being written to HBM — the flash-attention
+    # backward strategy expressed in pure JAX
+    out = jax.lax.map(jax.checkpoint(q_block), (qp, qpos_c))  # (nq,B,qc,H,hd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * qc, h, hd)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def attn_init(key: Array, cfg, dtype) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, hq * hd, dtype),
+        "wk": layers.dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": layers.dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": layers.dense_init(ks[3], hq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p: dict, cfg, x: Array, positions, mrope_positions=None):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(p["q_norm"], q)
+        k = layers.rms_norm(p["k_norm"], k)
+    if cfg.mrope and mrope_positions is not None:
+        q = layers.apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = layers.apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.use_rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def head_constrain(mesh, t: Array) -> Array:
+    """Pin (B, S, H, hd) activations to head sharding over the 'model' axis —
+    forces GSPMD into head-parallel attention (logits (B, H/tp, Sq, Sk) per
+    device) instead of keeping sequence sharding through the softmax."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return t
+    if t.ndim != 4 or t.shape[2] % mesh.shape["model"] != 0:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    nb = 1
+    for a in batch_axes:
+        nb *= mesh.shape[a]
+    ba = batch_axes if (nb and t.shape[0] % nb == 0) else ()
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(mesh, P(ba, None, "model", None)))
+
+
+def attn_forward(p: dict, cfg, x: Array, positions: Array, window: int | None,
+                 mrope_positions: Array | None = None, mesh=None) -> Array:
+    """x: (B, S, D); positions: (B, S) int32. Returns (B, S, D)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, mrope_positions)
+    k = gqa_repeat(k, cfg.num_heads)
+    v = gqa_repeat(v, cfg.num_heads)
+    q = head_constrain(mesh, q)
+    k = head_constrain(mesh, k)
+    v = head_constrain(mesh, v)
+    if getattr(cfg, "use_flash_kernel", False):
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, window=window)
+        out = out.transpose(0, 2, 1, 3)
+    elif s >= CHUNK_THRESHOLD:
+        out = attend_chunked(q, k, v, positions, positions, window,
+                             cfg.head_dim ** -0.5)
+    else:
+        qp = positions[:, None, :, None]  # (B,1,Sq,1)
+        kp = positions[:, None, None, :]  # (B,1,1,Sk)
+        mask = kp <= qp
+        if window is not None:
+            mask = mask & (kp > qp - window)
+        out = attend(q, k, v, mask, cfg.head_dim ** -0.5)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# cached decode
+# ---------------------------------------------------------------------------
+
+def kv_quantized(cfg) -> bool:
+    return getattr(cfg, "kv_cache_dtype", "") == "int8"
+
+
+def init_layer_cache(cfg, batch: int, cache_len: int, dtype) -> dict:
+    shape = (batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    if kv_quantized(cfg):
+        sshape = shape[:-1] + (1,)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def layer_cache_spec(cfg, batch: int, cache_len: int, dtype):
+    shape = (batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    if kv_quantized(cfg):
+        sshape = shape[:-1] + (1,)
+        return {"k": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "k_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
+                "v_scale": jax.ShapeDtypeStruct(sshape, jnp.float32)}
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def quantize_kv(x: Array) -> tuple[Array, Array]:
+    """Per-(token, head) symmetric int8: x (..., hd) -> (int8, fp32 scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    q = jnp.round(x.astype(jnp.float32)
+                  / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _update_cache(cache_kv: Array, new_kv: Array, lengths: Array, ring: bool) -> Array:
+    """Insert new_kv (B, 1, Hkv, hd) at per-sequence slot lengths (B,)."""
+    cache_len = cache_kv.shape[1]
+    slot = lengths % cache_len if ring else lengths
+
+    def upd(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (s, 0, 0))
+
+    return jax.vmap(upd)(cache_kv, new_kv, slot)
+
+
+def attn_decode_step(p: dict, cfg, cache: dict, x: Array, lengths: Array,
+                     window: int | None,
+                     mrope_positions: Array | None = None) -> tuple[Array, dict]:
+    """x: (B, 1, D); lengths: (B,) tokens already in cache. Returns (B,1,D), cache'."""
+    b = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    ring = window is not None and cache_len == window
+    q, k_new, v_new = _project_qkv(p, cfg, x, lengths[:, None], mrope_positions)
+    if kv_quantized(cfg):
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_cache = {
+            "k": _update_cache(cache["k"], kq, lengths, ring),
+            "v": _update_cache(cache["v"], vq, lengths, ring),
+            "k_scale": _update_cache(cache["k_scale"], ks, lengths, ring),
+            "v_scale": _update_cache(cache["v_scale"], vs, lengths, ring),
+        }
+        k_cache = dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v_cache = dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        k_cache = _update_cache(cache["k"], k_new, lengths, ring)
+        v_cache = _update_cache(cache["v"], v_new, lengths, ring)
+        new_cache = {"k": k_cache, "v": v_cache}
+
+    k = gqa_repeat(k_cache, cfg.num_heads)
+    v = gqa_repeat(v_cache, cfg.num_heads)
+    idx = jnp.arange(cache_len)[None, :]  # (1, S)
+    if ring:
+        # slot i holds absolute position: valid iff that position is within
+        # the last `window` tokens of [0, lengths].
+        n_valid = jnp.minimum(lengths[:, None] + 1, cache_len)
+        # with ring writes, every slot < n_valid is a live position
+        mask = idx < n_valid
+    else:
+        mask = idx <= lengths[:, None]
+        if window is not None:
+            mask = mask & (idx > lengths[:, None] - window)
+    mask = mask[:, None, None, :]  # (B,1,1,Sk)
+    out = attend(q, k, v, mask, cfg.head_dim ** -0.5)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return out, new_cache
+
+
+def attn_decode_step_cp(p: dict, cfg, cache: dict, x: Array, lengths: Array,
+                        window: int | None, mesh,
+                        mrope_positions: Array | None = None
+                        ) -> tuple[Array, dict]:
+    """Decode-time context parallelism: the KV cache is sequence-sharded over
+    the "model" axis; each shard attends its local chunk and the partial
+    (acc, m, l) online-softmax stats are merged with a pmax + two psums of
+    (B, Hq, 1, ·) — a few hundred KB instead of gathering the full cache.
+
+    This is the paper's decentralized one-all-reduce design (§4.3) applied
+    to attention: replicate the small operands (q, new k/v), shard the big
+    state, reduce once.  Projections (wq..wo) run OUTSIDE under GSPMD, so
+    head-sharded weights keep working unchanged.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    b = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    tp = mesh.shape["model"]
+    ring = window is not None and cache_len == window
+    q, k_new, v_new = _project_qkv(p, cfg, x, lengths[:, None], mrope_positions)
+    quant = kv_quantized(cfg)
+    if quant:
+        kq, ksc = quantize_kv(k_new)
+        vq, vsc = quantize_kv(v_new)
+        new_tree = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
+    else:
+        new_tree = {"k": k_new, "v": v_new}
+    cache_tree = {kk: cache[kk] for kk in new_tree}
+
+    batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    nb = 1
+    for a in batch_axes:
+        nb *= mesh.shape[a]
+    ba = batch_axes if (nb and b % nb == 0) else ()
+    scale = cfg.head_dim ** -0.5
+
+    def body(q_, new_t, cache_t, lens):
+        kc = cache_t["k"]
+        s_loc = kc.shape[1]
+        start = jax.lax.axis_index("model") * s_loc
+        slot_global = lens % cache_len if ring else lens
+        local_slot = slot_global - start
+        in_range = (local_slot >= 0) & (local_slot < s_loc)
+
+        def upd(c, n, s, ok):
+            s_cl = jnp.clip(s, 0, s_loc - 1)
+            new = jax.lax.dynamic_update_slice(c, n, (s_cl, 0, 0))
+            return jnp.where(ok, new, c)
+
+        cache_t = jax.tree.map(
+            lambda c, n: jax.vmap(upd)(c, n, local_slot, in_range),
+            cache_t, new_t)
+        if quant:
+            kc = dequantize_kv(cache_t["k"], cache_t["k_scale"], q_.dtype)
+            vc = dequantize_kv(cache_t["v"], cache_t["v_scale"], q_.dtype)
+        else:
+            kc, vc = cache_t["k"], cache_t["v"]
+
+        # grouped-GQA attention WITHOUT materializing gqa_repeat: repeating
+        # 4 kv heads to 32 q heads would read the cache 8x (measured as the
+        # top HBM term of MoE decode) — index kv heads per q-head group
+        # instead, exactly what a TPU flash kernel does
+        hkv = kc.shape[2]
+        g = cfg.num_heads // hkv
+        qg = q_.reshape(q_.shape[0], 1, hkv, g, q_.shape[-1])  # (B,1,Hkv,G,hd)
+        logits = jnp.einsum("bqhgd,bshd->bhgqs", qg, kc,
+                            preferred_element_type=jnp.float32) * scale
+        gidx = start + jnp.arange(s_loc)[None, :]          # (1, s_loc) global
+        if ring:
+            n_valid = jnp.minimum(lens[:, None] + 1, cache_len)
+            mask = gidx < n_valid
+        else:
+            mask = gidx <= lens[:, None]
+            if window is not None:
+                mask = mask & (gidx > lens[:, None] - window)
+        mask5 = mask[:, None, None, None, :]               # (B,1,1,1,s_loc)
+        logits = jnp.where(mask5, logits, NEG_INF)
+        m_loc = jnp.max(logits, axis=-1)                   # (B,Hkv,G,1)
+        pr = jnp.exp(logits - m_loc[..., None])
+        pr = jnp.where(mask5, pr, 0.0)
+        l_loc = jnp.sum(pr, axis=-1)
+        acc_loc = jnp.einsum("bhgqs,bshd->bhgqd", pr.astype(vc.dtype), vc,
+                             preferred_element_type=jnp.float32)
+        m_g = jax.lax.pmax(m_loc, "model")
+        corr = jnp.exp(m_loc - m_g)
+        l_g = jax.lax.psum(l_loc * corr, "model")
+        acc_g = jax.lax.psum(acc_loc * corr[..., None], "model")
+        out = acc_g / jnp.maximum(l_g[..., None], 1e-30)   # (B,Hkv,G,1,hd)
+        b_, _, _, _, hd = out.shape
+        out = out.astype(q_.dtype).transpose(0, 3, 1, 2, 4)
+        return out.reshape(b_, 1, hkv * g, hd), cache_t    # (B,1,H,hd)
+
+    rep = jax.tree.map(lambda a: P(*([ba] + [None] * (a.ndim - 1))), new_tree)
+    shd = jax.tree.map(lambda a: P(ba, "model", *([None] * (a.ndim - 2))),
+                       cache_tree)
+    out, new_cache = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(ba, None, None, None), rep, shd, P(ba)),
+        out_specs=(P(ba, None, None, None), shd),
+        check_vma=True,
+    )(q, new_tree, cache_tree, lengths)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return out, new_cache
+
+
+def use_cp_decode(cfg, mesh, cache_len: int) -> bool:
+    """Sequence-sharded decode applies when a mesh with a 'model' axis is
+    present, the cache length divides it, and the config opts in."""
+    return (mesh is not None
+            and "model" in getattr(mesh, "axis_names", ())
+            and getattr(cfg, "kv_cache_shard", "seq") == "seq"
+            and cache_len % mesh.shape["model"] == 0)
+
+
+def attn_prefill(p: dict, cfg, cache: dict, x: Array, positions: Array,
+                 window: int | None,
+                 mrope_positions: Array | None = None,
+                 mesh=None) -> tuple[Array, dict]:
+    """Full-sequence forward that also fills the cache (non-ring layout only
+    when S <= cache_len; for ring caches the last `window` tokens are kept)."""
+    b, s, _ = x.shape
+    cache_len = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, cfg, x, positions, mrope_positions)
+    kr = gqa_repeat(k, cfg.num_heads)
+    vr = gqa_repeat(v, cfg.num_heads)
+    q = head_constrain(mesh, q)
+    kr = head_constrain(mesh, kr)
+    vr = head_constrain(mesh, vr)
+    if s >= CHUNK_THRESHOLD:
+        out = attend_chunked(q, kr, vr, positions, positions, window,
+                             cfg.head_dim ** -0.5)
+    else:
+        qp = positions[:, None, :, None]
+        kp = positions[:, None, None, :]
+        mask = kp <= qp
+        if window is not None:
+            mask = mask & (kp > qp - window)
+        out = attend(q, kr, vr, mask, cfg.head_dim ** -0.5)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    if s >= cache_len:
+        # ring layout invariant: position p lives at slot p % cache_len, so the
+        # kept tail [s-cache_len, s) must be rolled to line up with future
+        # decode writes at slot (lengths % cache_len).
+        k_keep = jnp.roll(k[:, s - cache_len:], shift=s, axis=1)
+        v_keep = jnp.roll(v[:, s - cache_len:], shift=s, axis=1)
+        if kv_quantized(cfg):
+            kq, ks = quantize_kv(k_keep)
+            vq, vs = quantize_kv(v_keep)
+            cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        else:
+            cache = {"k": k_keep.astype(cache["k"].dtype),
+                     "v": v_keep.astype(cache["v"].dtype)}
+    elif kv_quantized(cfg):
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        cache = {
+            kk: jax.lax.dynamic_update_slice(cache[kk], nn, (0, 0, 0, 0))
+            for kk, nn in (("k", kq), ("v", vq),
+                           ("k_scale", ks), ("v_scale", vs))
+        }
+    else:
+        cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        }
+    return out, cache

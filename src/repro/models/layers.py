@@ -1,0 +1,146 @@
+"""Core NN layers shared by every architecture.
+
+Pure-functional JAX: params are pytrees of jnp arrays, every function is
+``f(params, x, ...) -> y``. Compute follows a bf16-weights / fp32-accumulate
+policy; norms and softmax always run in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, d_in: int, d_out: int, dtype) -> Array:
+    scale = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(w: Array, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(kind: str, params: Any, x: Array) -> Array:
+    if kind == "layernorm":
+        return layer_norm(params, x)
+    return rms_norm(params, x)
+
+
+def norm_init(kind: str, d: int, dtype) -> Any:
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE and qwen2-vl multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """Inverse frequencies, shape (head_dim // 2,), fp32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions3: Array, theta: float,
+                sections: tuple[int, int, int]) -> Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, hd); positions3: (B, S, 3) int32 (temporal, height, width).
+    ``sections`` gives the number of *frequency pairs* per component and must
+    sum to hd // 2 (e.g. (16, 24, 24) for hd=128).
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    # angle per component, then select component per frequency-band section
+    ang_all = positions3[..., None, :].astype(jnp.float32) * inv[None, None, :, None]
+    # ang_all: (B, S, hd/2, 3)
+    sel = jnp.concatenate([
+        jnp.full((sections[0],), 0, jnp.int32),
+        jnp.full((sections[1],), 1, jnp.int32),
+        jnp.full((sections[2],), 2, jnp.int32),
+    ])  # (hd/2,)
+    ang = jnp.take_along_axis(ang_all, sel[None, None, :, None], axis=-1)[..., 0]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: Array, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, f, dtype),
+        "w_up": dense_init(k2, d, f, dtype),
+        "w_down": dense_init(k3, f, d, dtype),
+    }
+
+
+def mlp_apply(params: dict, x: Array, act: str = "silu") -> Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = (jax.nn.gelu(g) if act == "gelu" else jax.nn.silu(g)) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: Array, labels: Array, valid_vocab: int) -> Array:
+    """CE over possibly vocab-padded logits. logits: (..., Vpad), labels int."""
+    vpad = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if vpad != valid_vocab:
+        mask = jnp.arange(vpad) < valid_vocab
+        lf = jnp.where(mask, lf, -1e9)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return logz - gold

@@ -1,0 +1,212 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD for train/prefill (quadratic intra-chunk dual form + sequential
+inter-chunk state recurrence via ``lax.scan``), O(1)-state recurrent update
+for decode.  This is the attention-free family assigned to the framework —
+the paper's expert-parallel technique is inapplicable here (documented in
+DESIGN.md §Arch-applicability); the block runs under data parallelism.
+
+Shapes follow the reference: x is split into H heads of P=headdim channels;
+state is (H, P, N) with N = d_state; B/C are shared across heads (n_groups=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Array = jax.Array
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_headdim
+
+
+def conv_dim(cfg) -> int:
+    return d_inner(cfg) + 2 * cfg.ssm_state
+
+
+def mamba_init(key: Array, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di, h, n = d_inner(cfg), n_heads(cfg), cfg.ssm_state
+    dc = conv_dim(cfg)
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z (di), xBC (dc), dt (h)]
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_dconv, dc), jnp.float32)
+                   * (1.0 / jnp.sqrt(cfg.ssm_dconv))).astype(dtype),
+        "conv_b": jnp.zeros((dc,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": layers.dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt: Array):
+    di, h, n = d_inner(cfg), n_heads(cfg), cfg.ssm_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d. xbc: (B,S,C), w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                 chunk: int, h0: Array | None):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p); dt: (b, s, h) (already softplus'ed); A: (h,) negative;
+    B, C: (b, s, n).  Returns y (b, s, h, p) and final state (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    xc = x.reshape(b, c, chunk, h, p)
+    dtc = dt.reshape(b, c, chunk, h)
+    Bc = B.reshape(b, c, chunk, n)
+    Cc = C.reshape(b, c, chunk, n)
+
+    dA = dtc * A[None, None, None, :]                      # (b,c,q,h) <= 0
+    dA_cs = jnp.cumsum(dA, axis=2)                          # inclusive cumsum
+    # intra-chunk dual (quadratic) form
+    # L[i,j] = exp(dA_cs[i] - dA_cs[j]) for j <= i
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (b,c,i,j,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    cmask = causal[None, None, :, :, None]
+    # mask BEFORE exp: the non-causal triangle has seg > 0 and exp overflows
+    # to inf, which turns the where's backward into inf*0 = NaN
+    seg = jnp.where(cmask, seg, 0.0)
+    L = jnp.where(cmask, jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))                 # (b,c,i,j)
+    att = CB[..., None] * L                                 # (b,c,i,j,h)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]           # (b,c,q,h,p)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xdt)
+
+    # chunk-local end states: sum_j exp(dA_cs[-1] - dA_cs[j]) * dt_j * B_j x_j
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)     # (b,c,q,h)
+    states = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                        decay_to_end * dtc, Bc.astype(jnp.float32),
+                        xc.astype(jnp.float32))             # (b,c,h,p,n)
+
+    # inter-chunk recurrence over c
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # (b,c,h)
+    init = jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    final, entry_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    entry_states = entry_states.transpose(1, 0, 2, 3, 4)    # (b,c,h,p,n)
+
+    # contribution of the entering state to each position in the chunk
+    state_decay = jnp.exp(dA_cs)                            # (b,c,q,h)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                         Cc.astype(jnp.float32), entry_states, state_decay)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba_forward(p: dict, cfg, x: Array, state: dict | None = None,
+                  chunk: int = 256):
+    """Full-sequence SSD. x: (B,S,D) -> (B,S,D). If ``state`` is given the
+    final (conv, ssm) states are also returned for cache handoff."""
+    b, s, d = x.shape
+    h, pdim, n = n_heads(cfg), cfg.ssm_headdim, cfg.ssm_state
+    di = d_inner(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(b, s, h, pdim)
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ck = min(chunk, s) if s % min(chunk, s) == 0 else s
+    y, final = _ssd_chunked(xs, dt, A, B, C, ck, None)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = layers.rms_norm(p["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if state is not None:
+        conv_state = xbc_raw_tail(zxbcdt, cfg, cfg.ssm_dconv).astype(x.dtype)
+        return out, {"conv": conv_state, "ssm": final.astype(jnp.float32)}
+    return out
+
+
+def xbc_raw_tail(zxbcdt: Array, cfg, k: int) -> Array:
+    """Last k-1 pre-conv xBC activations, padded on the left if S < k-1."""
+    di, n = d_inner(cfg), cfg.ssm_state
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    s = xbc.shape[1]
+    if s >= k - 1:
+        return xbc[:, s - (k - 1):, :]
+    return jnp.pad(xbc, ((0, 0), (k - 1 - s, 0), (0, 0)))
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    h, pdim, n = n_heads(cfg), cfg.ssm_headdim, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_dconv - 1, conv_dim(cfg)), dtype),
+        "ssm": jnp.zeros((batch, h, pdim, n), jnp.float32),
+    }
+
+
+def mamba_cache_spec(cfg, batch: int, dtype) -> dict:
+    h, pdim, n = n_heads(cfg), cfg.ssm_headdim, cfg.ssm_state
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_dconv - 1, conv_dim(cfg)), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, h, pdim, n), jnp.float32),
+    }
+
+
+def mamba_decode_step(p: dict, cfg, cache: dict, x: Array):
+    """x: (B, 1, D) -> (B, 1, D), cache'. Recurrent O(1) update."""
+    b = x.shape[0]
+    h, pdim, n = n_heads(cfg), cfg.ssm_headdim, cfg.ssm_state
+    di = d_inner(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc_new, dt = _split_proj(cfg, zxbcdt)
+
+    # depthwise causal conv over [cache.conv ; xbc_new]
+    win = jnp.concatenate([cache["conv"].astype(xbc_new.dtype), xbc_new], axis=1)
+    k = cfg.ssm_dconv
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out)[:, None, :]                 # (B,1,C)
+    new_conv = win[:, 1:, :].astype(cache["conv"].dtype)
+
+    xs = xbc[..., :di].reshape(b, h, pdim)
+    B = xbc[:, 0, di:di + n]
+    C = xbc[:, 0, di + n:]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,h)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dtv * A[None, :])                          # (B,h)
+    ssm = cache["ssm"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dtv, B.astype(jnp.float32), xs.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), ssm)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = layers.rms_norm(p["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": ssm}

@@ -1,0 +1,179 @@
+"""Public model API: build_model(cfg) -> Model with pure-functional entry
+points used by the launcher, serving engine, tests and benchmarks.
+
+  init(rng)                          -> params
+  forward(params, batch, mesh)       -> (logits, aux_loss)      full sequence
+  loss(params, batch, mesh)          -> (scalar, metrics)       training loss
+  prefill(params, batch, cache, mesh)-> (logits_last, cache)
+  decode_step(params, cache, batch, mesh) -> (logits, cache)    one token
+  cache_specs(batch, cache_len)      -> ShapeDtypeStruct pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer
+
+Array = jax.Array
+
+
+def sinusoidal_embedding(positions: Array, d: int) -> Array:
+    """positions: (B, S) -> (B, S, d) fp32 sinusoidal table."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable
+    forward: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_specs: Callable
+    init_cache: Callable
+
+
+def _embed_inputs(cfg, params, batch) -> tuple[Array, Array, Array | None, Array]:
+    """Returns (x (B,S,D), positions (B,S), mrope_pos or None, loss_mask (B,S))."""
+    dt = cfg.dtype_jnp
+    if cfg.family == "audio":
+        x = batch["frame_embeds"].astype(dt)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        mask = jnp.ones((b, s), jnp.float32)
+    elif cfg.family == "vlm":
+        tok = jnp.take(params["embed"],
+                       jnp.clip(batch["tokens"], 0, cfg.vocab_size - 1), axis=0)
+        x = jnp.concatenate([batch["patch_embeds"].astype(dt), tok.astype(dt)],
+                            axis=1)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        mask = (jnp.arange(s)[None] >= cfg.num_patch_tokens).astype(jnp.float32)
+        mask = jnp.broadcast_to(mask, (b, s))
+        return x, pos, batch.get("mrope_positions"), mask
+    else:
+        x = jnp.take(params["embed"],
+                     jnp.clip(batch["tokens"], 0, cfg.vocab_size - 1),
+                     axis=0).astype(dt)
+        b, s = batch["tokens"].shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        mask = jnp.ones((b, s), jnp.float32)
+    if cfg.positional == "sinusoidal":
+        x = x + sinusoidal_embedding(pos, cfg.d_model).astype(dt)
+    return x, pos, None, mask
+
+
+def _lm_head(cfg, params, x: Array) -> Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def build_model(cfg) -> Model:
+    dt = cfg.dtype_jnp
+    pdt = cfg.param_dtype_jnp
+
+    # ---- init -----------------------------------------------------------
+    def init(rng: Array) -> dict:
+        k_emb, k_blocks, k_head = jax.random.split(rng, 3)
+        params = {
+            "embed": layers.embed_init(k_emb, cfg.vocab_padded, cfg.d_model, pdt),
+            "blocks": transformer.init_blocks(cfg, k_blocks),
+            "final_norm": layers.norm_init(cfg.norm, cfg.d_model, pdt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.dense_init(
+                k_head, cfg.d_model, cfg.vocab_padded, pdt)
+        return params
+
+    # ---- full-sequence forward -------------------------------------------
+    def forward(params, batch, mesh=None):
+        x, pos, mrope, _ = _embed_inputs(cfg, params, batch)
+        window = transformer.effective_window(cfg, x.shape[1])
+        x, aux = transformer.forward_stack(cfg, mesh, params["blocks"], x, pos,
+                                           window, mrope)
+        x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+        return _lm_head(cfg, params, x), aux
+
+    def _chunked_ce(params, x, labels, chunk: int = 512):
+        """lm_head + CE one sequence chunk at a time — never materializes the
+        full (B, S, V) logits (V can be 150k+)."""
+        b, s, d = x.shape
+        if s <= chunk or s % chunk != 0:
+            return layers.softmax_cross_entropy(
+                _lm_head(cfg, params, x), labels, cfg.vocab_size)
+        nc = s // chunk
+        xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+        def body(args):
+            xx, ll = args
+            return layers.softmax_cross_entropy(
+                _lm_head(cfg, params, xx), ll, cfg.vocab_size)
+
+        ce = jax.lax.map(jax.checkpoint(body), (xc, lc))     # (nc, B, chunk)
+        return ce.transpose(1, 0, 2).reshape(b, s)
+
+    def loss(params, batch, mesh=None):
+        x, pos, mrope, mask = _embed_inputs(cfg, params, batch)
+        window = transformer.effective_window(cfg, x.shape[1])
+        x, aux = transformer.forward_stack(cfg, mesh, params["blocks"], x, pos,
+                                           window, mrope)
+        x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+        ce = _chunked_ce(params, x, batch["labels"])
+        ce = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ---- cache ------------------------------------------------------------
+    def cache_specs(batch: int, cache_len: int):
+        return transformer.stack_cache_spec(cfg, batch, cache_len, dt)
+
+    def init_cache(batch: int, cache_len: int):
+        return transformer.init_stack_cache(cfg, batch, cache_len, dt)
+
+    # ---- prefill ------------------------------------------------------------
+    def prefill(params, batch, cache, mesh=None):
+        x, pos, mrope, _ = _embed_inputs(cfg, params, batch)
+        window = transformer.effective_window(cfg, x.shape[1])
+        x, cache = transformer.prefill_stack(cfg, mesh, params["blocks"], x,
+                                             pos, cache, window, mrope)
+        x = layers.norm_apply(cfg.norm, params["final_norm"], x[:, -1:])
+        return _lm_head(cfg, params, x), cache
+
+    # ---- decode -------------------------------------------------------------
+    def decode_step(params, cache, batch, mesh=None, context_len=None):
+        tok = jnp.clip(batch["tokens"], 0, cfg.vocab_size - 1)
+        x = jnp.take(params["embed"], tok, axis=0).astype(dt)
+        lengths = batch["lengths"]
+        if cfg.positional == "sinusoidal":
+            x = x + sinusoidal_embedding(lengths[:, None], cfg.d_model).astype(dt)
+        # windowing decision is made at the *logical* context length
+        # (cache extent may already be clipped to the window => ring buffer)
+        cache_len = _attn_cache_len(cfg, cache)
+        window = (transformer.effective_window(cfg, context_len or cache_len)
+                  if cache_len is not None else cfg.sliding_window)
+        x, cache = transformer.decode_stack(cfg, mesh, params["blocks"], x,
+                                            lengths, cache, window,
+                                            batch.get("mrope_positions"))
+        x = layers.norm_apply(cfg.norm, params["final_norm"], x)
+        return _lm_head(cfg, params, x), cache
+
+    return Model(cfg, init, forward, loss, prefill, decode_step,
+                 cache_specs, init_cache)
+
+
+def _attn_cache_len(cfg, cache) -> int | None:
+    if cfg.family == "ssm":
+        return None
+    if cfg.family == "hybrid":
+        return cache["attn"]["k"].shape[2]
+    return cache["k"].shape[2]

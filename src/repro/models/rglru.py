@@ -1,0 +1,126 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+The hybrid architecture interleaves two recurrent (RG-LRU) blocks with one
+local-attention block (pattern rec,rec,attn).  The RG-LRU recurrence is a
+per-channel (diagonal) gated linear recurrence:
+
+    r_t = sigmoid(x_t W_a + b_a)              (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)              (input gate)
+    log a_t = -c * r_t * softplus(Lambda)     (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over the sequence (the
+diagonal recurrence composes associatively); decode is the O(1) step.
+Being per-channel diagonal, the recurrence shards cleanly over the channel
+dimension — this is the recurrent-scan sharding noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Array = jax.Array
+_C = 8.0
+
+
+def rglru_init(key: Array, cfg, dtype) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = sigmoid(Lambda)^c is in (0.9, 0.999)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "in_x": layers.dense_init(ks[1], d, w, dtype),
+        "in_y": layers.dense_init(ks[2], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv1d_width, w), jnp.float32)
+                   * (1.0 / jnp.sqrt(cfg.conv1d_width))).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": layers.dense_init(ks[4], w, w, dtype),
+        "bias_a": jnp.zeros((w,), jnp.float32),
+        "gate_x": layers.dense_init(ks[5], w, w, dtype),
+        "bias_x": jnp.zeros((w,), jnp.float32),
+        "Lambda": lam,
+        "out": layers.dense_init(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Array | None):
+    """Depthwise causal conv; x: (B,S,W). If state (B,K-1,W) given, prepends it."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b, pad[:, pad.shape[1] - (k - 1):, :]
+
+
+def _rglru_gates(p: dict, x: Array):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["gate_a"]).astype(jnp.float32)
+                       + p["bias_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["gate_x"]).astype(jnp.float32)
+                       + p["bias_x"])
+    log_a = -_C * r * jax.nn.softplus(p["Lambda"])[None, None, :]
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * x.astype(jnp.float32))
+    return a, gated_x
+
+
+def _linear_scan(a: Array, bx: Array, h0: Array | None):
+    """h_t = a_t h_{t-1} + bx_t via associative scan. a, bx: (B,S,W) fp32."""
+    if h0 is not None:
+        # fold initial state into the first step
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_forward(p: dict, cfg, x: Array, state: dict | None = None):
+    """Recurrent block over a full sequence. x: (B,S,D)."""
+    y_branch = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["in_y"]))
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"])
+    conv_state = state.get("conv") if state else None
+    xb, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+    a, bx = _rglru_gates(p, xb)
+    h0 = state.get("h") if state else None
+    h = _linear_scan(a, bx, h0)
+    out = (h.astype(x.dtype) * y_branch)
+    out = jnp.einsum("bsw,wd->bsd", out, p["out"])
+    if state is not None:
+        return out, {"conv": new_conv.astype(x.dtype), "h": h[:, -1, :]}
+    return out
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_cache_spec(cfg, batch: int, dtype) -> dict:
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv1d_width - 1, cfg.lru_width), dtype),
+        "h": jax.ShapeDtypeStruct((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_decode_step(p: dict, cfg, cache: dict, x: Array):
+    """x: (B,1,D) -> (B,1,D), cache'."""
+    y_branch = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["in_y"]))
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"])
+    xb, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], cache["conv"])
+    a, bx = _rglru_gates(p, xb)  # (B,1,W)
+    h = a[:, 0] * cache["h"] + bx[:, 0]
+    out = (h[:, None, :].astype(x.dtype) * y_branch)
+    out = jnp.einsum("bsw,wd->bsd", out, p["out"])
+    return out, {"conv": new_conv.astype(x.dtype), "h": h}

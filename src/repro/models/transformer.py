@@ -1,0 +1,404 @@
+"""Decoder stacks for every assigned architecture family.
+
+Parameters are *prestacked* along a leading layer axis and the stack runs
+under ``jax.lax.scan`` — the TPU realization of the paper's expert-wise
+weights prestacking (C2): one contiguous array per weight kind, O(1) HLO
+size in depth, and a layout the grouped-GEMM kernel can consume directly.
+``prestack=False`` (naive baseline, Fig. 4's "unstacking") switches to a
+python loop over per-layer arrays.
+
+Families:
+  dense / audio / vlm : attention + SwiGLU MLP
+  moe                 : attention + expert-parallel MoE (core/expert_parallel)
+  ssm                 : Mamba-2 SSD blocks (no MLP)
+  hybrid              : RG-LRU x2 + local attention, each followed by MLP
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import expert_parallel
+from repro.models import attention, layers, mamba2, rglru
+
+Array = jax.Array
+
+
+def seq_constrain(mesh, x: Array) -> Array:
+    """Megatron-style sequence sharding of the residual stream over the
+    'model' axis (beyond-paper activation-memory optimization; collectives
+    around attention / MoE dispatch are inserted by GSPMD / shard_map)."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    b, s, _ = x.shape
+    if s % mesh.shape["model"] != 0 or s < 2048:
+        return x
+    batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    nb = 1
+    for a in batch_axes:
+        nb *= mesh.shape[a]
+    ba = batch_axes if (nb and b % nb == 0) else ()
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(ba, "model", None)))
+
+
+# ---------------------------------------------------------------------------
+# per-layer init (stacked via vmap)
+# ---------------------------------------------------------------------------
+
+def _dense_layer_init(cfg, dtype, key):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+        "attn": attention.attn_init(k1, cfg, dtype),
+        "ln2": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+        "mlp": layers.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+    return p
+
+
+def _moe_layer_init(cfg, dtype, key):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    e, d, f = cfg.num_experts_padded, cfg.d_model, cfg.d_ff
+
+    def expert_w(k, din, dout):
+        ks = jax.random.split(k, e)
+        return jax.vmap(lambda kk: layers.dense_init(kk, din, dout, dtype))(ks)
+
+    experts = {
+        "w_gate": expert_w(k3, d, f),
+        "w_up": expert_w(k4, d, f),
+        "w_down": expert_w(k5, f, d),
+    }
+    r = max(getattr(cfg, "expert_replication", 1), 1)
+    if r > 1:
+        # paper §5.3 overlapping placement: store r copies so each expert
+        # lives on r expert-parallel shards ("use the extra memory")
+        experts = jax.tree.map(
+            lambda a: jnp.concatenate([a] * r, axis=0), experts)
+    return {
+        "ln1": layers.norm_init(cfg.norm, d, dtype),
+        "attn": attention.attn_init(k1, cfg, dtype),
+        "ln2": layers.norm_init(cfg.norm, d, dtype),
+        "router": layers.dense_init(k2, d, e, dtype),
+        "experts": experts,
+    }
+
+
+def _ssm_layer_init(cfg, dtype, key):
+    return {
+        "ln": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+        "mamba": mamba2.mamba_init(key, cfg, dtype),
+    }
+
+
+def _hybrid_layer_init(cfg, dtype, key, kind: str):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+        "ln2": layers.norm_init(cfg.norm, cfg.d_model, dtype),
+        "mlp": layers.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+    if kind == "rec":
+        p["mix"] = rglru.rglru_init(k1, cfg, dtype)
+    else:
+        p["mix"] = attention.attn_init(k1, cfg, dtype)
+    return p
+
+
+def hybrid_pattern(cfg) -> list[str]:
+    """rec,rec,attn repeating (RecurrentGemma's 1 attention per 2 recurrent)."""
+    return ["attn" if i % 3 == 2 else "rec" for i in range(cfg.num_layers)]
+
+
+def init_blocks(cfg, key) -> dict:
+    dtype = cfg.param_dtype_jnp
+    L = cfg.num_layers
+    if cfg.family == "hybrid":
+        pat = hybrid_pattern(cfg)
+        rec_keys = jax.random.split(jax.random.fold_in(key, 0),
+                                    pat.count("rec"))
+        attn_keys = jax.random.split(jax.random.fold_in(key, 1),
+                                     max(pat.count("attn"), 1))
+        rec = jax.vmap(lambda k: _hybrid_layer_init(cfg, dtype, k, "rec"))(rec_keys)
+        attn = jax.vmap(lambda k: _hybrid_layer_init(cfg, dtype, k, "attn"))(attn_keys)
+        return {"rec": rec, "attn": attn}
+    keys = jax.random.split(key, L)
+    if cfg.family == "moe":
+        f = lambda k: _moe_layer_init(cfg, dtype, k)
+    elif cfg.family == "ssm":
+        f = lambda k: _ssm_layer_init(cfg, dtype, k)
+    else:
+        f = lambda k: _dense_layer_init(cfg, dtype, k)
+    return jax.vmap(f)(keys)
+
+
+# ---------------------------------------------------------------------------
+# forward (full-sequence): train and prefill share block bodies
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_block(cfg, mesh, layer_p, x, positions, window, mrope_pos,
+                    cache_l=None, decode=False):
+    """Generic attention(+cache) + {mlp | moe} block. Returns (x, new_cache, aux)."""
+    h = layers.norm_apply(cfg.norm, layer_p["ln1"], x)
+    if decode:
+        if attention.use_cp_decode(cfg, mesh, cache_l["k"].shape[1]):
+            h, new_cache = attention.attn_decode_step_cp(
+                layer_p["attn"], cfg, cache_l, h, positions, window, mesh,
+                mrope_pos)
+        else:
+            h, new_cache = attention.attn_decode_step(
+                layer_p["attn"], cfg, cache_l, h, positions, window, mrope_pos)
+    elif cache_l is not None:
+        pos2d = positions if positions.ndim == 2 else positions[None]
+        h, new_cache = attention.attn_prefill(
+            layer_p["attn"], cfg, cache_l, h, pos2d, window, mrope_pos,
+            mesh=mesh)
+    else:
+        pos2d = positions if positions.ndim == 2 else positions[None]
+        h = attention.attn_forward(layer_p["attn"], cfg, h, pos2d, window,
+                                   mrope_pos, mesh=mesh)
+        new_cache = None
+    if not decode:
+        # constrain at the produce site: the TP partial-sum of wo is
+        # reduce-SCATTERED into the sequence-sharded residual instead of
+        # all-reduced at full length (Megatron sequence parallelism)
+        h = seq_constrain(mesh, h)
+    x = x + h
+    h = layers.norm_apply(cfg.norm, layer_p["ln2"], x)
+    if cfg.family == "moe":
+        moe_p = {"router": layer_p["router"], "experts": layer_p["experts"]}
+        h, aux = expert_parallel.moe_layer(cfg, mesh, moe_p, h)
+    else:
+        h = layers.mlp_apply(layer_p["mlp"], h, cfg.act)
+        aux = jnp.zeros((), jnp.float32)
+    if not decode:
+        h = seq_constrain(mesh, h)
+    return x + h, new_cache, aux
+
+
+def _ssm_block(cfg, layer_p, x, cache_l=None, decode=False):
+    h = layers.norm_apply(cfg.norm, layer_p["ln"], x)
+    if decode:
+        h, new_cache = mamba2.mamba_decode_step(layer_p["mamba"], cfg, cache_l, h)
+    elif cache_l is not None:
+        h, new_cache = mamba2.mamba_forward(layer_p["mamba"], cfg, h,
+                                            state=cache_l)
+    else:
+        h = mamba2.mamba_forward(layer_p["mamba"], cfg, h)
+        new_cache = None
+    return x + h, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _hybrid_block(cfg, layer_p, kind, x, positions, cache_l=None, decode=False,
+                  mesh=None):
+    h = layers.norm_apply(cfg.norm, layer_p["ln1"], x)
+    if kind == "rec":
+        if decode:
+            h, new_cache = rglru.rglru_decode_step(layer_p["mix"], cfg, cache_l, h)
+        elif cache_l is not None:
+            h, new_cache = rglru.rglru_forward(layer_p["mix"], cfg, h,
+                                               state=cache_l)
+        else:
+            h = rglru.rglru_forward(layer_p["mix"], cfg, h)
+            new_cache = None
+    else:
+        w = cfg.sliding_window
+        if decode:
+            if attention.use_cp_decode(cfg, mesh, cache_l["k"].shape[1]):
+                h, new_cache = attention.attn_decode_step_cp(
+                    layer_p["mix"], cfg, cache_l, h, positions, w, mesh)
+            else:
+                h, new_cache = attention.attn_decode_step(
+                    layer_p["mix"], cfg, cache_l, h, positions, w)
+        elif cache_l is not None:
+            pos2d = positions if positions.ndim == 2 else positions[None]
+            h, new_cache = attention.attn_prefill(layer_p["mix"], cfg, cache_l,
+                                                  h, pos2d, w, mesh=mesh)
+        else:
+            pos2d = positions if positions.ndim == 2 else positions[None]
+            h = attention.attn_forward(layer_p["mix"], cfg, h, pos2d, w,
+                                       mesh=mesh)
+            new_cache = None
+    x = x + h
+    h = layers.norm_apply(cfg.norm, layer_p["ln2"], x)
+    h = layers.mlp_apply(layer_p["mlp"], h, cfg.act)
+    return x + h, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def forward_stack(cfg, mesh, blocks, x, positions, window, mrope_pos=None):
+    """Run all layers over a full sequence. Returns (x, total_aux)."""
+    if cfg.family == "hybrid":
+        pat = hybrid_pattern(cfg)
+        aux = jnp.zeros((), jnp.float32)
+        ri = ai = 0
+        for kind in pat:
+            if kind == "rec":
+                lp = jax.tree.map(lambda a: a[ri], blocks["rec"])
+                ri += 1
+            else:
+                lp = jax.tree.map(lambda a: a[ai], blocks["attn"])
+                ai += 1
+            fn = _maybe_remat(cfg, lambda xx, lp=lp, kind=kind: _hybrid_block(
+                cfg, lp, kind, seq_constrain(mesh, xx), positions,
+                mesh=mesh)[0])
+            x = fn(x)
+        return x, aux
+
+    if cfg.family == "ssm":
+        def body(xx, lp):
+            out, _, aux = _ssm_block(cfg, lp, seq_constrain(mesh, xx))
+            return out, aux
+    else:
+        def body(xx, lp):
+            out, _, aux = _attn_mlp_block(cfg, mesh, lp, seq_constrain(mesh, xx),
+                                          positions, window, mrope_pos)
+            return out, aux
+
+    if cfg.prestack:
+        x, auxs = jax.lax.scan(
+            lambda c, lp: _maybe_remat(cfg, body)(c, lp), x, blocks)
+        aux = jnp.sum(auxs)
+    else:
+        # naive "unstacked" layout: python loop over per-layer slices
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], blocks)
+            x, a = _maybe_remat(cfg, body)(x, lp)
+            aux = aux + a
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# cached paths (prefill / decode) — caches stacked along the layer axis
+# ---------------------------------------------------------------------------
+
+def stack_cache_spec(cfg, batch: int, cache_len: int, dtype):
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        per = mamba2.mamba_cache_spec(cfg, batch, dtype)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), per)
+    if cfg.family == "hybrid":
+        pat = hybrid_pattern(cfg)
+        rec = rglru.rglru_cache_spec(cfg, batch, dtype)
+        attn_len = min(cache_len, cfg.sliding_window or cache_len)
+        att = attention.layer_cache_spec(cfg, batch, attn_len, dtype)
+        return {
+            "rec": jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                (pat.count("rec"),) + s.shape, s.dtype), rec),
+            "attn": jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                (pat.count("attn"),) + s.shape, s.dtype), att),
+        }
+    win = effective_window(cfg, cache_len)
+    clen = min(cache_len, win) if win else cache_len
+    per = attention.layer_cache_spec(cfg, batch, clen, dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), per)
+
+
+def init_stack_cache(cfg, batch: int, cache_len: int, dtype):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        stack_cache_spec(cfg, batch, cache_len, dtype))
+
+
+def effective_window(cfg, seq_len: int) -> int | None:
+    """Window actually used at this sequence length: native sliding window if
+    the arch has one; the long-context SWA variant kicks in beyond
+    ``cfg.long_context_threshold`` for otherwise-full-attention archs."""
+    if cfg.sliding_window:
+        return cfg.sliding_window
+    if cfg.long_context_window and seq_len >= cfg.long_context_threshold:
+        return cfg.long_context_window
+    return None
+
+
+def decode_stack(cfg, mesh, blocks, x, lengths, cache, window,
+                 mrope_pos=None):
+    """One-token decode through all layers. x: (B,1,D)."""
+    if cfg.family == "hybrid":
+        pat = hybrid_pattern(cfg)
+        new_rec, new_attn = [], []
+        ri = ai = 0
+        for kind in pat:
+            if kind == "rec":
+                lp = jax.tree.map(lambda a: a[ri], blocks["rec"])
+                cl = jax.tree.map(lambda a: a[ri], cache["rec"])
+                x, nc, _ = _hybrid_block(cfg, lp, "rec", x, lengths, cl,
+                                         decode=True, mesh=mesh)
+                new_rec.append(nc)
+                ri += 1
+            else:
+                lp = jax.tree.map(lambda a: a[ai], blocks["attn"])
+                cl = jax.tree.map(lambda a: a[ai], cache["attn"])
+                x, nc, _ = _hybrid_block(cfg, lp, "attn", x, lengths, cl,
+                                         decode=True, mesh=mesh)
+                new_attn.append(nc)
+                ai += 1
+        stack = lambda lst: jax.tree.map(lambda *a: jnp.stack(a), *lst)
+        return x, {"rec": stack(new_rec), "attn": stack(new_attn)}
+
+    if cfg.family == "ssm":
+        def body(xx, inp):
+            lp, cl = inp
+            out, nc, _ = _ssm_block(cfg, lp, xx, cl, decode=True)
+            return out, nc
+    else:
+        def body(xx, inp):
+            lp, cl = inp
+            out, nc, _ = _attn_mlp_block(cfg, mesh, lp, xx, lengths, window,
+                                         mrope_pos, cl, decode=True)
+            return out, nc
+
+    x, new_cache = jax.lax.scan(body, x, (blocks, cache))
+    return x, new_cache
+
+
+def prefill_stack(cfg, mesh, blocks, x, positions, cache, window,
+                  mrope_pos=None):
+    """Full-sequence forward that fills the cache."""
+    if cfg.family == "hybrid":
+        pat = hybrid_pattern(cfg)
+        new_rec, new_attn = [], []
+        ri = ai = 0
+        for kind in pat:
+            x = seq_constrain(mesh, x)
+            if kind == "rec":
+                lp = jax.tree.map(lambda a: a[ri], blocks["rec"])
+                cl = jax.tree.map(lambda a: a[ri], cache["rec"])
+                x, nc, _ = _hybrid_block(cfg, lp, "rec", x, positions, cl,
+                                         mesh=mesh)
+                new_rec.append(nc)
+                ri += 1
+            else:
+                lp = jax.tree.map(lambda a: a[ai], blocks["attn"])
+                cl = jax.tree.map(lambda a: a[ai], cache["attn"])
+                x, nc, _ = _hybrid_block(cfg, lp, "attn", x, positions, cl,
+                                         mesh=mesh)
+                new_attn.append(nc)
+                ai += 1
+        stack = lambda lst: jax.tree.map(lambda *a: jnp.stack(a), *lst)
+        return x, {"rec": stack(new_rec), "attn": stack(new_attn)}
+
+    if cfg.family == "ssm":
+        def body(xx, inp):
+            lp, cl = inp
+            out, nc, _ = _ssm_block(cfg, lp, seq_constrain(mesh, xx), cl)
+            return out, nc
+    else:
+        def body(xx, inp):
+            lp, cl = inp
+            out, nc, _ = _attn_mlp_block(cfg, mesh, lp, seq_constrain(mesh, xx),
+                                         positions, window, mrope_pos, cl)
+            return out, nc
+
+    x, new_cache = jax.lax.scan(body, x, (blocks, cache))
+    return x, new_cache

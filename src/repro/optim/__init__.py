@@ -1,0 +1,3 @@
+from repro.optim import adamw
+from repro.optim.adamw import (OptimizerConfig, OptState, init, update, lr_at,
+                               clip_by_global_norm, global_norm)

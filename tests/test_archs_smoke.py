@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests on reduced configs (CPU, 1 device):
+forward/train step runs, output shapes correct, no NaNs, and the cached
+prefill+decode path agrees with the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.model import build_model
+
+
+def make_batch(cfg, b, s, rng):
+    if cfg.family == "audio":
+        return {"frame_embeds": jnp.asarray(
+                    rng.normal(size=(b, s, cfg.d_model)), jnp.float32),
+                "labels": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.family == "vlm":
+        p = cfg.num_patch_tokens
+        return {"tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (b, s - p)), jnp.int32),
+                "patch_embeds": jnp.asarray(
+                    rng.normal(size=(b, p, cfg.d_model)), jnp.float32),
+                "mrope_positions": jnp.broadcast_to(
+                    jnp.arange(s, dtype=jnp.int32)[None, :, None], (b, s, 3)),
+                "labels": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    return {"tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, s = 2, 16
+    batch = make_batch(cfg, b, s, rng)
+
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (b, s, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    loss, metrics = model.loss(params, batch)
+    assert bool(jnp.isfinite(loss))
+
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    """decode(prefill(x[:-1]), x[-1]) logits == forward(x) last-token logits."""
+    cfg = get_config(arch).reduced()
+    if cfg.is_moe:
+        # high capacity so the full-sequence and single-token paths drop the
+        # same (zero) tokens; capacity effects are tested in test_core_moe
+        cfg = cfg.replace(capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    b, s = 2, 12
+    batch = make_batch(cfg, b, s, rng)
+    batch.pop("labels")
+
+    full_logits, _ = model.forward(params, batch)          # (b, s, V)
+
+    # prefill on the first s-1 tokens, then decode token s-1
+    def cut(v):
+        return v[:, :s - 1] if v.ndim >= 2 and v.shape[1] in (s, s - cfg.num_patch_tokens) else v
+
+    if cfg.family == "audio":
+        pre = {"frame_embeds": batch["frame_embeds"][:, :s - 1]}
+        step_tok = jnp.zeros((b, 1), jnp.int32)  # decode embeds tokens; skip
+        pytest.skip("audio decode consumes token ids (EnCodec): covered by "
+                    "test_decode_runs below")
+    elif cfg.family == "vlm":
+        pre = {"tokens": batch["tokens"][:, :-1],
+               "patch_embeds": batch["patch_embeds"],
+               "mrope_positions": batch["mrope_positions"][:, :s - 1]}
+        step_tok = batch["tokens"][:, -1:]
+    else:
+        pre = {"tokens": batch["tokens"][:, :s - 1]}
+        step_tok = batch["tokens"][:, -1:]
+
+    cache = model.init_cache(b, s + 4)
+    _, cache = model.prefill(params, pre, cache)
+    step = {"tokens": step_tok, "lengths": jnp.full((b,), s - 1, jnp.int32)}
+    if cfg.family == "vlm":
+        step["mrope_positions"] = batch["mrope_positions"][:, -1:]
+    dec_logits, _ = model.decode_step(params, cache, step)
+
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0], np.float32),
+        np.asarray(full_logits[:, -1], np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_audio_decode_runs():
+    cfg = get_config("musicgen_large").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = 2
+    cache = model.init_cache(b, 16)
+    pre = {"frame_embeds": jnp.ones((b, 8, cfg.d_model), jnp.float32)}
+    logits, cache = model.prefill(params, pre, cache)
+    step = {"tokens": jnp.zeros((b, 1), jnp.int32),
+            "lengths": jnp.full((b,), 8, jnp.int32)}
+    logits, cache = model.decode_step(params, cache, step)
+    assert logits.shape[0] == b and bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["mamba2_130m", "recurrentgemma_2b"])
+def test_long_context_decode_state_is_bounded(arch):
+    """SSM/hybrid long_500k viability: cache size independent of context."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    short = model.cache_specs(2, 64)
+    long = model.cache_specs(2, 4096)
+    short_b = sum(np.prod(s.shape) for s in jax.tree.leaves(short))
+    long_b = sum(np.prod(s.shape) for s in jax.tree.leaves(long))
+    if cfg.family == "ssm":
+        assert short_b == long_b
+    else:  # hybrid: attention window bounded by sliding_window
+        assert long_b <= short_b * (cfg.sliding_window * 2 / 64)
+
+
+def test_sliding_window_variant_bounds_dense_cache():
+    """Dense archs switch to SWA beyond the long-context threshold."""
+    cfg = get_config("qwen2_72b")
+    model = build_model(cfg)
+    spec = model.cache_specs(1, 524_288)
+    assert spec["k"].shape[2] == cfg.long_context_window
+
+
+@pytest.mark.parametrize("arch", ["qwen3_moe_30b_a3b", "granite_moe_3b_a800m"])
+def test_moe_strategies_agree(arch):
+    """dense (L_B) and dispatch (L_R) strategies produce the same model
+    output at high capacity — the paper's methods differ in cost, not math."""
+    cfg = get_config(arch).reduced()
+    rng = np.random.default_rng(2)
+    b, s = 2, 8
+    batch = make_batch(cfg, b, s, rng)
+
+    outs = {}
+    for strat in ("dense", "dispatch"):
+        c = cfg.replace(moe_strategy=strat, capacity_factor=8.0)
+        model = build_model(c)
+        params = model.init(jax.random.PRNGKey(3))
+        logits, _ = model.forward(params, batch)
+        outs[strat] = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(outs["dense"], outs["dispatch"],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_prestack_vs_unstacked_forward():
+    """prestack=False (the paper's naive 'unstacking' baseline) is
+    numerically identical to the canonical prestacked path."""
+    cfg = get_config("qwen3_0_6b").reduced()
+    rng = np.random.default_rng(4)
+    batch = make_batch(cfg, 2, 8, rng)
+    m1 = build_model(cfg.replace(prestack=True))
+    m2 = build_model(cfg.replace(prestack=False))
+    p = m1.init(jax.random.PRNGKey(5))
+    l1, _ = m1.forward(p, batch)
+    l2, _ = m2.forward(p, batch)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), rtol=1e-5, atol=1e-5)

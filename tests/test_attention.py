@@ -1,0 +1,133 @@
+"""Attention: chunked (flash-style) vs dense oracle, ring-buffer decode,
+GQA, RoPE/M-RoPE properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.models import attention, layers
+
+
+def dense_oracle(q, k, v, q_pos, k_pos, window, scale):
+    qp = q_pos[:, None, :, None]
+    kp = k_pos[:, None, None, :]
+    mask = kp <= qp
+    if window is not None:
+        mask = mask & (kp > qp - window)
+    return attention.attend(q, k, v, mask, scale)
+
+
+@pytest.mark.parametrize("s,window", [(64, None), (100, None), (64, 16),
+                                      (256, 64), (130, 33)])
+def test_chunked_attention_matches_dense(s, window):
+    key = jax.random.PRNGKey(0)
+    b, h, hd = 2, 4, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    out_c = attention.attend_chunked(q, k, v, pos, pos, window, hd ** -0.5,
+                                     q_chunk=32, k_chunk=48)
+    out_d = dense_oracle(q, k, v, pos, pos, window, hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_d),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       s=st.integers(3, 80),
+       qc=st.sampled_from([8, 17, 64]),
+       kc=st.sampled_from([8, 31, 64]))
+def test_chunked_attention_property(seed, s, qc, kc):
+    key = jax.random.PRNGKey(seed)
+    b, h, hd = 1, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    out_c = attention.attend_chunked(q, k, v, pos, pos, None, hd ** -0.5,
+                                     q_chunk=qc, k_chunk=kc)
+    out_d = dense_oracle(q, k, v, pos, pos, None, hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_d),
+                               rtol=5e-5, atol=5e-5)
+
+
+def test_gqa_repeat():
+    k = jnp.arange(2 * 3 * 2 * 4).reshape(2, 3, 2, 4)
+    r = attention.gqa_repeat(k, 6)
+    assert r.shape == (2, 3, 6, 4)
+    np.testing.assert_array_equal(np.asarray(r[:, :, 0]), np.asarray(r[:, :, 2]))
+    np.testing.assert_array_equal(np.asarray(r[:, :, 3]), np.asarray(r[:, :, 5]))
+
+
+def test_ring_buffer_decode_matches_full_cache():
+    """Sliding-window decode with a ring cache == full cache + window mask."""
+    cfg = get_config("qwen3_0_6b").reduced().replace(use_rope=True)
+    key = jax.random.PRNGKey(1)
+    p = attention.attn_init(key, cfg, jnp.float32)
+    b, steps, win = 1, 12, 4
+
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (b, steps, cfg.d_model))
+    # ring cache sized exactly `win`
+    ring = attention.init_layer_cache(cfg, b, win, jnp.float32)
+    # big cache, windowed mask
+    full = attention.init_layer_cache(cfg, b, steps + 1, jnp.float32)
+    for t in range(steps):
+        lengths = jnp.full((b,), t, jnp.int32)
+        x = xs[:, t:t + 1]
+        o_ring, ring = attention.attn_decode_step(p, cfg, ring, x, lengths, win)
+        o_full, full = attention.attn_decode_step(p, cfg, full, x, lengths, win)
+        np.testing.assert_allclose(np.asarray(o_ring), np.asarray(o_full),
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=f"step {t}")
+
+
+def test_mrope_reduces_to_rope_on_text():
+    """With all three position components equal (pure text), M-RoPE == RoPE."""
+    b, s, h, hd = 2, 6, 2, 32
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (b, s, h, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos3 = jnp.broadcast_to(pos[..., None], (b, s, 3))
+    r1 = layers.apply_rope(x, pos, 1e4)
+    r2 = layers.apply_mrope(x, pos3, 1e4, (6, 5, 5))
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_qk_norm_applied():
+    cfg = get_config("qwen3_0_6b").reduced()
+    assert cfg.qk_norm
+    key = jax.random.PRNGKey(3)
+    p = attention.attn_init(key, cfg, jnp.float32)
+    assert "q_norm" in p and "k_norm" in p
+
+
+def test_int8_kv_cache_decode_close_to_fp():
+    """int8 KV cache (per-token-per-head scales): prefill+decode within
+    quantization tolerance of the fp path, at half the cache bytes."""
+    import numpy as np
+    from repro.models.model import build_model
+    base = get_config("qwen3_0_6b").reduced()
+    b, s = 2, 10
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, base.vocab_size, (b, s)), jnp.int32)
+
+    outs = {}
+    for name, cfg in (("fp", base), ("int8", base.replace(kv_cache_dtype="int8"))):
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        cache = m.init_cache(b, 24)
+        _, cache = m.prefill(params, {"tokens": toks[:, :-1]}, cache)
+        logits, _ = m.decode_step(params, cache, {
+            "tokens": toks[:, -1:], "lengths": jnp.full((b,), s - 1, jnp.int32)})
+        outs[name] = np.asarray(logits, np.float32)
+    # int8 bytes check
+    m8 = build_model(base.replace(kv_cache_dtype="int8"))
+    spec = m8.cache_specs(b, 24)
+    assert spec["k"].dtype == jnp.int8 and "k_scale" in spec
+    np.testing.assert_allclose(outs["int8"], outs["fp"], rtol=0.08, atol=0.08)

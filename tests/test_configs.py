@@ -1,0 +1,94 @@
+"""Assigned-architecture configs must match the published specs exactly."""
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, input_specs
+
+# (layers, d_model, heads, kv, d_ff, vocab, experts, top_k)
+ASSIGNED = {
+    "musicgen_large":       (48, 2048, 32, 32, 8192, 2048, 0, 0),
+    "qwen3_moe_30b_a3b":    (48, 2048, 32, 4, 768, 151936, 128, 8),
+    "granite_moe_3b_a800m": (32, 1536, 24, 8, 512, 49155, 40, 8),
+    "deepseek_67b":         (95, 8192, 64, 8, 22016, 102400, 0, 0),
+    "qwen2_vl_7b":          (28, 3584, 28, 4, 18944, 152064, 0, 0),
+    "qwen3_0_6b":           (28, 1024, 16, 8, 3072, 151936, 0, 0),
+    "stablelm_12b":         (40, 5120, 32, 8, 13824, 100352, 0, 0),
+    "qwen2_72b":            (80, 8192, 64, 8, 29568, 152064, 0, 0),
+    "mamba2_130m":          (24, 768, 0, 0, 0, 50280, 0, 0),
+    "recurrentgemma_2b":    (26, 2560, 10, 1, 7680, 256000, 0, 0),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assigned_spec(arch):
+    L, d, h, kv, ff, v, e, k = ASSIGNED[arch]
+    cfg = get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.num_experts == e
+    assert cfg.experts_per_token == k
+
+
+def test_families():
+    fam = {a: get_config(a).family for a in ARCH_IDS}
+    assert fam["musicgen_large"] == "audio"
+    assert fam["qwen3_moe_30b_a3b"] == "moe"
+    assert fam["granite_moe_3b_a800m"] == "moe"
+    assert fam["qwen2_vl_7b"] == "vlm"
+    assert fam["mamba2_130m"] == "ssm"
+    assert fam["recurrentgemma_2b"] == "hybrid"
+    assert all(fam[a] == "dense" for a in
+               ("deepseek_67b", "qwen3_0_6b", "stablelm_12b", "qwen2_72b"))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_shardability(arch):
+    """Production-mesh divisibility: padded experts and padded vocab divide
+    the 16-way model axis."""
+    cfg = get_config(arch)
+    assert cfg.vocab_padded % 16 == 0
+    if cfg.is_moe:
+        assert cfg.num_experts_padded % 16 == 0
+        assert cfg.num_experts_padded >= cfg.num_experts
+
+
+def test_granite_expert_padding():
+    cfg = get_config("granite_moe_3b_a800m")
+    assert cfg.num_experts == 40 and cfg.num_experts_padded == 48
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers <= 3
+    assert r.d_model <= 512
+    if r.is_moe:
+        assert r.num_experts_padded <= 4
+    assert r.family == get_config(arch).family
+
+
+def test_dbrx_paper_config():
+    cfg = get_config("dbrx")
+    assert cfg.num_layers == 40
+    assert cfg.d_model == 6144
+    assert cfg.num_experts == 16 and cfg.experts_per_token == 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_cover_all_pairs(arch, shape):
+    cfg = get_config(arch)
+    specs = input_specs(cfg, SHAPES[shape])
+    assert specs, f"no input specs for {arch} x {shape}"
+    kind = SHAPES[shape].kind
+    if kind == "train":
+        assert "labels" in specs
+    if kind == "decode":
+        assert specs["tokens"].shape[1] == 1
+        assert "lengths" in specs
+    b = SHAPES[shape].global_batch
+    for v in specs.values():
+        assert v.shape[0] == b

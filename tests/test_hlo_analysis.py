@@ -1,0 +1,73 @@
+"""The HLO analyzer (roofline data source) must account loop trip counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo
+
+
+def test_scan_flops_trip_multiplied():
+    D, L, B = 64, 7, 4
+    w = jnp.zeros((L, D, D))
+    x = jnp.ones((B, D))
+
+    def f(x, w):
+        def body(c, wl):
+            return c @ wl, ()
+        return jax.lax.scan(body, x, w)[0]
+
+    compiled = jax.jit(f).lower(x, w).compile()
+    t = hlo.analyze(compiled.as_text())
+    assert t.flops == 2 * B * D * D * L
+
+
+def test_nested_scan_flops():
+    D, Lo, Li = 32, 3, 5
+    w = jnp.zeros((Lo, Li, D, D))
+    x = jnp.ones((2, D))
+
+    def f(x, w):
+        def outer(c, wo):
+            def inner(ci, wl):
+                return ci @ wl, ()
+            return jax.lax.scan(inner, c, wo)[0], ()
+        return jax.lax.scan(outer, x, w)[0]
+
+    compiled = jax.jit(f).lower(x, w).compile()
+    t = hlo.analyze(compiled.as_text())
+    assert t.flops == 2 * 2 * D * D * Lo * Li
+
+
+def test_plain_matmul_flops_exact():
+    for n in (64, 128, 256):
+        a = jnp.zeros((n, n), jnp.float32)
+        compiled = jax.jit(lambda a, b: a @ b).lower(a, a).compile()
+        t = hlo.analyze(compiled.as_text())
+        assert t.flops == 2 * n ** 3
+
+
+def test_bf16_matmul_counts():
+    a = jnp.zeros((128, 128), jnp.bfloat16)
+    compiled = jax.jit(lambda a, b: (a @ b)).lower(a, a).compile()
+    t = hlo.analyze(compiled.as_text())
+    assert t.flops == 2 * 128 ** 3
+
+
+def test_shape_bytes():
+    assert hlo.shape_bytes("bf16", "4,8") == 64
+    assert hlo.shape_bytes("f32", "") == 4       # scalar
+    assert hlo.shape_bytes("pred", "10") == 10
+
+
+def test_hbm_bytes_less_than_raw():
+    D, L = 64, 4
+    w = jnp.zeros((L, D, D))
+    x = jnp.ones((2, D))
+
+    def f(x, w):
+        def body(c, wl):
+            return jax.nn.relu(c @ wl) + 1.0, ()
+        return jax.lax.scan(body, x, w)[0]
+
+    t = hlo.analyze(jax.jit(f).lower(x, w).compile().as_text())
+    assert 0 < t.hbm_bytes <= t.bytes

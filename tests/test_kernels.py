@@ -1,0 +1,140 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.moe_gemm import moe_ffn_kernel
+
+
+def rand(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.1).astype(dtype)
+
+
+@pytest.mark.parametrize("e,c,d,f", [
+    (1, 8, 64, 128),
+    (4, 16, 128, 256),
+    (8, 128, 128, 64),
+    (3, 33, 96, 80),        # ragged: exercises padding paths
+    (2, 1, 128, 256),       # single-token decode capacity
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gemm_matches_ref(e, c, d, f, dtype):
+    key = jax.random.PRNGKey(e * 1000 + c)
+    ks = jax.random.split(key, 4)
+    x = rand(ks[0], (e, c, d), dtype)
+    wg = rand(ks[1], (e, d, f), dtype)
+    wu = rand(ks[2], (e, d, f), dtype)
+    wd = rand(ks[3], (e, f, d), dtype)
+    y_k = moe_ffn_kernel(x, wg, wu, wd, interpret=True)
+    y_r = ref.moe_ffn_ref(x, wg, wu, wd)
+    assert y_k.shape == y_r.shape == (e, c, d)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bc,bf", [(32, 64), (128, 256), (8, 16)])
+def test_moe_gemm_block_shape_invariance(bc, bf):
+    """Output must not depend on the BlockSpec tiling."""
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 4)
+    e, c, d, f = 2, 64, 128, 128
+    x = rand(ks[0], (e, c, d), jnp.float32)
+    wg = rand(ks[1], (e, d, f), jnp.float32)
+    wu = rand(ks[2], (e, d, f), jnp.float32)
+    wd = rand(ks[3], (e, f, d), jnp.float32)
+    y = moe_ffn_kernel(x, wg, wu, wd, block_c=bc, block_f=bf, interpret=True)
+    y_r = ref.moe_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_wrapper_dispatches_interpret_on_cpu():
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 4)
+    e, c, d, f = 2, 16, 64, 64
+    x = rand(ks[0], (e, c, d), jnp.float32)
+    wg = rand(ks[1], (e, d, f), jnp.float32)
+    wu = rand(ks[2], (e, d, f), jnp.float32)
+    wd = rand(ks[3], (e, f, d), jnp.float32)
+    y = ops.moe_ffn(x, wg, wu, wd)
+    y_r = ref.moe_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_zero_padding_exactness():
+    """Zero rows (dispatch padding slots) must produce exactly zero output."""
+    e, c, d, f = 2, 16, 64, 64
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    x = jnp.zeros((e, c, d), jnp.float32)
+    wg = rand(ks[0], (e, d, f), jnp.float32)
+    wu = rand(ks[1], (e, d, f), jnp.float32)
+    wd = rand(ks[2], (e, f, d), jnp.float32)
+    y = moe_ffn_kernel(x, wg, wu, wd, interpret=True)
+    assert float(jnp.max(jnp.abs(y))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attn import flash_attention
+
+
+@pytest.mark.parametrize("s,window,causal", [
+    (64, None, True), (128, 32, True), (96, None, True),
+    (64, None, False), (80, 48, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(s, window, causal, dtype):
+    key = jax.random.PRNGKey(s)
+    b, h, hd = 2, 3, 64
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (b, h, s, hd), dtype)
+    k = rand(ks[1], (b, h, s, hd), dtype)
+    v = rand(ks[2], (b, h, s, hd), dtype)
+    y = flash_attention(q, k, v, causal=causal, window=window,
+                        block_q=32, block_k=32, interpret=True)
+    y_r = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 32), (64, 64), (32, 16)])
+def test_flash_attention_block_invariance(bq, bk):
+    key = jax.random.PRNGKey(9)
+    b, h, s, hd = 1, 2, 128, 32
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (b, h, s, hd), jnp.float32)
+    k = rand(ks[1], (b, h, s, hd), jnp.float32)
+    v = rand(ks[2], (b, h, s, hd), jnp.float32)
+    y = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    y_r = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_model_level_flash_kernel_equivalence():
+    """cfg.use_flash_kernel routes attention through the Pallas kernel
+    (interpret mode on CPU) and must match the standard path end-to-end."""
+    from repro.configs.base import get_config
+    from repro.models.model import build_model
+    cfg = get_config("qwen3_0_6b").reduced()
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                                   jnp.int32)}
+    m0 = build_model(cfg)
+    m1 = build_model(cfg.replace(use_flash_kernel=True))
+    params = m0.init(jax.random.PRNGKey(0))
+    l0, _ = m0.forward(params, batch)
+    l1, _ = m1.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(l0, np.float32),
+                               np.asarray(l1, np.float32),
+                               rtol=2e-4, atol=2e-4)

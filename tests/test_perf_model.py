@@ -1,0 +1,94 @@
+"""The paper's analytical model must reproduce its own published numbers."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import perf_model as pm
+
+
+def test_table6_reproduced():
+    """Paper Table 6: estimated bounds for 2..8 Mac Studio nodes @ 10 GbE.
+
+    The paper's printed columns are internally inconsistent at the last
+    digit (e.g. row 3 prints Load .055 + Comp .001 + Lat .040 + Trans .002
+    yet Time 0.096), so we assert the reproduction within 1% of every
+    published Time/TP value rather than exact string equality.
+    """
+    rows = {r["nodes"]: r for r in pm.scaling_table()}
+    expect_tp = {2: 9.7, 3: 10.4, 4: 12.3, 6: 13.9, 8: 14.2}
+    expect_time = {2: 0.103, 3: 0.096, 4: 0.081, 6: 0.072, 8: 0.070}
+    for n in expect_tp:
+        assert abs(rows[n]["tokens_per_sec"] - expect_tp[n]) / expect_tp[n] < 0.01
+        assert abs(rows[n]["bound_s"] - expect_time[n]) < 1.2e-3
+
+
+def test_table6_breakdown_columns():
+    rows = {r["nodes"]: r for r in pm.scaling_table()}
+    # Table 6 load column: 0.061 / 0.055 / 0.040 / 0.031 / 0.029
+    expect_load = {2: 0.061, 3: 0.055, 4: 0.040, 6: 0.031, 8: 0.029}
+    for n, load in expect_load.items():
+        assert abs(rows[n]["load_s"] - load) < 1.5e-3, (n, rows[n]["load_s"])
+        assert abs(rows[n]["lat_s"] - 0.040) < 1e-9
+        assert abs(rows[n]["trans_s"] - 0.0016) < 2e-4
+
+
+def test_table5_cost_efficiency():
+    t5 = pm.paper_table5()
+    assert round(t5["databricks-8xh100"], 6) == 0.000389
+    assert round(t5["ours-2xm2ultra"], 6) == 0.000447
+    # the headline claim: 1.15x more cost-efficient
+    assert round(t5["ours-2xm2ultra"] / t5["databricks-8xh100"], 2) == 1.15
+
+
+def test_table1_derivations_from_dbrx_config():
+    """MoEWorkload.from_config(dbrx) must reproduce Table 1's derived
+    variables within the paper's own rounding."""
+    w = pm.MoEWorkload.from_config(get_config("dbrx"))
+    assert abs(w.params_sa_bytes - 7e9) / 7e9 < 0.15       # ~7 GB
+    assert abs(w.flops_sa - 14e9) / 14e9 < 0.15
+    assert abs(w.params_expert_bytes - 16e9) / 16e9 < 0.05  # ~16 GB
+    assert abs(w.flops_expert - 16e9) / 16e9 < 0.05
+    assert abs(w.comm_bytes - 2e6) / 2e6 < 0.05
+
+
+def test_rdma_projection_improves_two_node_throughput():
+    """Fig. 8: RoCEv2/IB NICs lift the 2-node bound from ~9.7 to ~16.3."""
+    base = pm.estimate(pm.DBRX_TABLE1, pm.M2_ULTRA_10GBE, 2).throughput
+    roce = pm.estimate(pm.DBRX_TABLE1, pm.M2_ULTRA_ROCE, 2).throughput
+    ib = pm.estimate(pm.DBRX_TABLE1, pm.M2_ULTRA_IB, 2).throughput
+    assert round(base, 1) == 9.7
+    assert 15.5 < roce < 17.0
+    assert 15.5 < ib < 17.0
+
+
+def test_gpu_term_is_load_dominated():
+    """Paper: 'In most cases, the maximum is the load time' — memory-bound."""
+    for n in (2, 3, 4, 6, 8):
+        e = pm.estimate(pm.DBRX_TABLE1, pm.M2_ULTRA_10GBE, n)
+        assert e.load_time > e.compute_time
+
+
+def test_latency_dominates_transfer_on_10gbe():
+    """Paper §3.1: network latency matters more than bandwidth."""
+    e = pm.estimate(pm.DBRX_TABLE1, pm.M2_ULTRA_10GBE, 2)
+    assert e.latency_time > 10 * e.transfer_time
+
+
+def test_tpu_regime_inversion():
+    """On TPU v5e ICI the comm term is bandwidth-dominated — the paper's
+    latency-dominated regime inverts (DESIGN.md §2)."""
+    e = pm.estimate(pm.DBRX_TABLE1, pm.TPU_V5E, 16)
+    assert e.latency_time < e.transfer_time
+
+
+def test_scalability_trend_matches_table4():
+    """Throughput increases with nodes but sublinearly (comm share grows)."""
+    tps = [pm.estimate(pm.DBRX_TABLE1, pm.M2_ULTRA_10GBE, n).throughput
+           for n in (2, 3, 4)]
+    assert tps[0] < tps[1] < tps[2]
+    assert tps[2] / tps[0] < 2.0  # far from linear scaling
+
+    comm_frac = [pm.estimate(pm.DBRX_TABLE1, pm.M2_ULTRA_10GBE, n).comm_time
+                 / pm.estimate(pm.DBRX_TABLE1, pm.M2_ULTRA_10GBE, n).total
+                 for n in (2, 3, 4)]
+    assert comm_frac[0] < comm_frac[1] < comm_frac[2]

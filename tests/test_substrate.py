@@ -1,0 +1,176 @@
+"""Substrate: optimizer, data pipeline, checkpointing, serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.ckpt import io as ckpt_io
+from repro.configs.base import get_config
+from repro.core import prestack
+from repro.data.pipeline import (MemmapSource, Pipeline, PipelineConfig,
+                                 SyntheticSource)
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_lr_schedule_warmup_and_cosine():
+    cfg = optim.OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                                min_lr_ratio=0.1)
+    assert float(optim.lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(optim.lr_at(cfg, jnp.asarray(5))) - 0.5) < 1e-6
+    assert abs(float(optim.lr_at(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+    end = float(optim.lr_at(cfg, jnp.asarray(110)))
+    assert abs(end - 0.1) < 1e-6
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-5
+    assert abs(float(optim.adamw.global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = optim.OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                                weight_decay=0.0, clip_norm=1e9)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    st = optim.init(params)
+    f = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(200):
+        g = jax.grad(f)(params)
+        params, st, _ = optim.update(cfg, g, st, params)
+    assert float(f(params)) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks():
+    cfg = optim.OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                                weight_decay=1.0, clip_norm=1e9)
+    params = {"x": jnp.asarray([1.0])}
+    st = optim.init(params)
+    g = {"x": jnp.asarray([0.0])}
+    p2, _, _ = optim.update(cfg, g, st, params)
+    assert float(p2["x"][0]) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_shapes_and_labels():
+    pc = PipelineConfig(seq_len=64, global_batch=8, vocab_size=100)
+    pipe = Pipeline(pc)
+    b = pipe.next_batch()
+    assert b["tokens"].shape == (8, 64)
+    assert b["labels"].shape == (8, 64)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert b["tokens"].max() < 100
+
+
+def test_pipeline_deterministic():
+    pc = PipelineConfig(seq_len=16, global_batch=2, vocab_size=50, seed=7)
+    b1 = Pipeline(pc).next_batch()
+    b2 = Pipeline(pc).next_batch()
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_memmap_source(tmp_path):
+    path = tmp_path / "toks.bin"
+    data = np.arange(10_000, dtype=np.uint16) % 97
+    data.tofile(path)
+    src = MemmapSource(str(path))
+    pc = PipelineConfig(seq_len=32, global_batch=4, vocab_size=97)
+    pipe = Pipeline(pc, source=src)
+    b = pipe.next_batch()
+    assert b["tokens"].shape == (4, 32)
+    assert b["tokens"].max() < 97
+
+
+# ---------------------------------------------------------------------------
+# checkpointing + prestack converter
+# ---------------------------------------------------------------------------
+
+def test_ckpt_roundtrip(tmp_path):
+    cfg = get_config("qwen3_0_6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "ck.npz")
+    ckpt_io.save(path, params, step=17)
+    restored, step = ckpt_io.restore(path)
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_convert_unstacked_moe():
+    """The paper's one-time stacking script: per-layer/per-expert checkpoint
+    -> canonical prestacked layout, with granite-style padding."""
+    L, E, D, F = 3, 5, 4, 8
+    key = jax.random.PRNGKey(1)
+    unstacked = {}
+    for i in range(L):
+        layer = {"ln": jnp.ones((D,))}
+        for e in range(E):
+            k = jax.random.fold_in(key, i * 100 + e)
+            layer[f"expert_{e}"] = {
+                "w_gate": jax.random.normal(k, (D, F))}
+        unstacked[f"layer_{i}"] = layer
+    stacked = ckpt_io.convert_unstacked(unstacked, num_experts_padded=8)
+    assert stacked["experts"]["w_gate"].shape == (L, 8, D, F)
+    assert stacked["ln"].shape == (L, D)
+    # padded experts are zero
+    assert float(jnp.sum(jnp.abs(stacked["experts"]["w_gate"][:, 5:]))) == 0.0
+    # original weights preserved
+    np.testing.assert_array_equal(
+        np.asarray(stacked["experts"]["w_gate"][1, 2]),
+        np.asarray(unstacked["layer_1"]["expert_2"]["w_gate"]))
+    # inverse
+    un2 = ckpt_io.to_unstacked(stacked, L)
+    assert set(un2) == {f"layer_{i}" for i in range(L)}
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def moe_engine():
+    cfg = get_config("qwen3_moe_30b_a3b").reduced()
+    return ServingEngine(cfg, EngineConfig(max_batch=2, prefill_len=8,
+                                           max_cache=32))
+
+
+def test_engine_completes_requests(moe_engine):
+    rng = np.random.default_rng(0)
+    uids = [moe_engine.submit(rng.integers(0, 100, 6), max_new_tokens=4)
+            for _ in range(3)]
+    done = moe_engine.run_until_done()
+    assert sorted(r.uid for r in done) == sorted(uids)
+    for r in done:
+        assert len(r.generated) == 4
+        assert all(0 <= t < moe_engine.cfg.vocab_size for t in r.generated)
+
+
+def test_engine_tracker_statistic(moe_engine):
+    e2 = moe_engine.expected_experts_per_node(2)
+    assert 0.0 < e2 <= moe_engine.cfg.num_experts / 2 + 1e-9
+
+
+def test_engine_standby_touches_experts(moe_engine):
+    val = moe_engine.standby()
+    assert np.isfinite(float(val))
+
+
+def test_engine_dense_arch_no_tracker():
+    cfg = get_config("qwen3_0_6b").reduced()
+    eng = ServingEngine(cfg, EngineConfig(max_batch=1, prefill_len=8,
+                                          max_cache=16))
+    eng.submit(np.arange(4), max_new_tokens=2)
+    done = eng.run_until_done()
+    assert len(done) == 1 and len(done[0].generated) == 2
