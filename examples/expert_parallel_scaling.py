@@ -38,10 +38,10 @@ def main():
     ref = None
     for n_model in (1, 2, 4, 8):
         if n_model == 1:
-            y, aux = expert_parallel.moe_layer(cfg, None, layer_p, x)
+            y, aux, _ = expert_parallel.moe_layer(cfg, None, layer_p, x)
         else:
             mesh = jax.make_mesh((8 // n_model, n_model), ("data", "model"))
-            y, aux = expert_parallel.moe_layer(cfg, mesh, layer_p, x)
+            y, aux, _ = expert_parallel.moe_layer(cfg, mesh, layer_p, x)
         y = np.asarray(y, np.float32)
         if ref is None:
             ref = y

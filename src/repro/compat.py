@@ -1,0 +1,65 @@
+"""JAX version-compatibility shims (single policy point for the repo).
+
+The codebase targets the modern ``jax.shard_map`` API (``check_vma=`` for
+the replication/varying-manual-axes checker) and the modern
+``AbstractMesh(axis_sizes, axis_names)`` constructor.  Installed JAX
+releases differ:
+
+* 0.4.x ships ``shard_map`` under ``jax.experimental.shard_map`` and calls
+  the checker ``check_rep``;
+* 0.4.x ``AbstractMesh`` takes a single tuple of ``(name, size)`` pairs.
+
+Every call site in ``src/`` and ``tests/`` goes through this module rather
+than feature-testing JAX locally, so a future version bump is a one-file
+change.  Policy: support the modern spelling natively, translate for the
+oldest JAX the container pins (0.4.37); never pin behaviour to a version
+string — feature-detect the actual signature instead.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+import jax
+
+if hasattr(jax, "shard_map"):                       # jax >= 0.6
+    _shard_map = jax.shard_map
+else:                                               # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_REP_KWARG = ("check_vma"
+              if "check_vma" in inspect.signature(_shard_map).parameters
+              else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the replication checker under its modern name.
+
+    On JAX versions that predate the varying-manual-axes rename the checker
+    is the legacy ``check_rep``, whose replication inference cannot handle
+    ``lax.scan`` carries (it raises "Scan carry input and output got
+    mismatched replication types ... as a temporary workaround pass
+    check_rep=False").  Every layer stack in this repo runs its shard_maps
+    under ``lax.scan``, so on those versions the checker is disabled
+    wholesale; on modern JAX ``check_vma`` is passed through unchanged.
+    """
+    if _REP_KWARG == "check_rep":
+        check_vma = False
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_REP_KWARG: check_vma})
+
+
+def abstract_mesh(axis_sizes: tuple[int, ...],
+                  axis_names: tuple[str, ...]) -> Any:
+    """Construct ``jax.sharding.AbstractMesh`` on any supported JAX.
+
+    Modern JAX: ``AbstractMesh(axis_sizes, axis_names)``.
+    JAX 0.4.x:  ``AbstractMesh(((name, size), ...))``.
+    """
+    from jax.sharding import AbstractMesh
+
+    pairs = tuple(zip(axis_names, axis_sizes))
+    try:
+        return AbstractMesh(pairs)
+    except TypeError:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))

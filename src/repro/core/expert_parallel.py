@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import moe as moe_lib
 from repro.core import router as router_lib
 
@@ -51,13 +52,39 @@ def _local_moe(cfg, experts: dict, x2d: Array, rout: router_lib.RouterOut,
                                 cfg.use_kernel)
 
 
-def moe_layer(cfg, mesh, layer_p: dict, x: Array) -> tuple[Array, Array]:
-    """Apply one MoE layer. x: (B, S, D) -> (y (B, S, D), aux_loss ()).
+def _mask_rout(rout: router_lib.RouterOut, valid: Array,
+               e_pad: int) -> router_lib.RouterOut:
+    """Dead-route invalid tokens: padding/garbage batch rows must consume
+    ZERO expert capacity (the batched-prefill engine recomputes in-flight
+    and empty slots under a mask — without this their tokens would crowd
+    real tokens out of the fixed-capacity dispatch)."""
+    top_idx = jnp.where(valid[:, None], rout.top_idx, e_pad)
+    top_w = jnp.where(valid[:, None], rout.top_w, 0.0)
+    return rout._replace(top_idx=top_idx.astype(jnp.int32), top_w=top_w)
+
+
+def moe_layer(cfg, mesh, layer_p: dict, x: Array, token_mask: Array | None = None
+              ) -> tuple[Array, Array, Array]:
+    """Apply one MoE layer.
+
+    x: (B, S, D) -> (y (B, S, D), aux_loss (), top_idx (B*S, K) int32).
+
+    ``top_idx`` is the layer's *actual* routing decision per token — the
+    device-side capture the serving engine's ``LRUExpertTracker`` consumes
+    (paper Table 1, E[#exec experts/node/layer]) instead of re-running the
+    router on the host.  With overlapping expert placement (r > 1) it is
+    the pre-stripe decision: which experts each token selected, not which
+    replica served it.
+
+    ``token_mask``: optional (B, S) bool — False tokens are dead-routed to
+    the padding sentinel (index E_pad): they consume no expert capacity,
+    produce zero MoE output, and appear as E_pad in ``top_idx``.
 
     ``layer_p``: {"router": (D, E_pad), "experts": {"w_gate": (E_pad, D, F),
     "w_up": ..., "w_down": ...}} — per-layer slices of the prestacked stack.
     """
     b, s, d = x.shape
+    k = cfg.experts_per_token
     r = max(getattr(cfg, "expert_replication", 1), 1)
     if mesh is None or EXPERT_AXIS not in getattr(mesh, "axis_names", ()):
         # single-shard path (smoke tests / CPU examples); with overlapping
@@ -70,11 +97,14 @@ def moe_layer(cfg, mesh, layer_p: dict, x: Array) -> tuple[Array, Array]:
         rout = router_lib.route(layer_p["router"], x2d, cfg.experts_per_token,
                                 norm_topk=cfg.router_norm_topk,
                                 n_valid_experts=cfg.num_experts)
+        if token_mask is not None:
+            rout = _mask_rout(rout, token_mask.reshape(b * s),
+                              cfg.num_experts_padded)
         cap = moe_lib.round_capacity(b * s, cfg.experts_per_token,
                                      cfg.num_experts_padded,
                                      cfg.capacity_factor)
         y = _local_moe(cfg, experts, x2d, rout, 0, cap)
-        return y.reshape(b, s, d), rout.aux_loss
+        return y.reshape(b, s, d), rout.aux_loss, rout.top_idx
 
     n_exp_shards = mesh.shape[EXPERT_AXIS]
     if r > 1:
@@ -89,9 +119,13 @@ def moe_layer(cfg, mesh, layer_p: dict, x: Array) -> tuple[Array, Array]:
     if b % max(_axes_size(mesh, batch_axes), 1) != 0:
         batch_axes = ()
 
+    if token_mask is None:
+        token_mask = jnp.ones((b, s), jnp.bool_)
     fn = {"decentralized": _decentralized, "centralized": _centralized,
           "a2a": _a2a}[cfg.expert_parallel]
-    return fn(cfg, mesh, layer_p, x, batch_axes, n_exp_shards, e_local)
+    y, aux, top_idx = fn(cfg, mesh, layer_p, x, token_mask, batch_axes,
+                         n_exp_shards, e_local)
+    return y, aux, top_idx.reshape(b * s, k)
 
 
 def _axes_size(mesh, axes) -> int:
@@ -121,7 +155,8 @@ def layer_p_router(layer_p):
 # decentralized (paper Fig. 7): replicated tokens, sharded experts, one psum
 # ---------------------------------------------------------------------------
 
-def _decentralized(cfg, mesh, layer_p, x, batch_axes, n_shards, e_local):
+def _decentralized(cfg, mesh, layer_p, x, token_mask, batch_axes, n_shards,
+                   e_local):
     """Paper Fig. 7, plus the paper's §5.3 *overlapping expert placement*:
     with ``cfg.expert_replication = r > 1`` every expert is stored on r
     shards (the stacked expert array carries r concatenated copies — "use
@@ -136,12 +171,14 @@ def _decentralized(cfg, mesh, layer_p, x, batch_axes, n_shards, e_local):
     e_pad = cfg.num_experts_padded
     n_grp = n_shards // r           # shards per expert copy
 
-    def body(router_w, experts, x_loc):
+    def body(router_w, experts, x_loc, tm_loc):
         bl, sl, d = x_loc.shape
         x2d = x_loc.reshape(bl * sl, d)
         rout = router_lib.route(router_w, x2d, cfg.experts_per_token,
                                 norm_topk=cfg.router_norm_topk,
                                 n_valid_experts=cfg.num_experts)
+        rout = _mask_rout(rout, tm_loc.reshape(bl * sl), e_pad)
+        routed = rout.top_idx            # pre-stripe: actual decisions
         idx = jax.lax.axis_index(EXPERT_AXIS)
         if r > 1:
             replica = idx // n_grp
@@ -157,22 +194,26 @@ def _decentralized(cfg, mesh, layer_p, x, batch_axes, n_shards, e_local):
         y = _local_moe(cfg, experts, x2d, rout, e_start, cap)
         y = jax.lax.psum(y, EXPERT_AXIS)
         aux = jax.lax.pmean(rout.aux_loss, batch_axes) if batch_axes else rout.aux_loss
-        return y.reshape(bl, sl, d), aux
+        return (y.reshape(bl, sl, d), aux,
+                routed.reshape(bl, sl, cfg.experts_per_token))
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
-        in_specs=(P(), _expert_specs(EXPERT_AXIS), P(batch_axes, None, None)),
-        out_specs=(P(batch_axes, None, None), P()),
+        in_specs=(P(), _expert_specs(EXPERT_AXIS), P(batch_axes, None, None),
+                  P(batch_axes, None)),
+        out_specs=(P(batch_axes, None, None), P(), P(batch_axes, None, None)),
         check_vma=True,
-    )(layer_p["router"], layer_p["experts"], x)
+    )(layer_p["router"], layer_p["experts"], x, token_mask)
 
 
 # ---------------------------------------------------------------------------
 # centralized (paper Fig. 3): 2 communications per layer
 # ---------------------------------------------------------------------------
 
-def _centralized(cfg, mesh, layer_p, x, batch_axes, n_shards, e_local):
+def _centralized(cfg, mesh, layer_p, x, token_mask, batch_axes, n_shards,
+                 e_local):
     b, s, d = x.shape
+    e_pad = cfg.num_experts_padded
     seq_shardable = s % n_shards == 0
     t_per_batch_shard = (b // max(_axes_size(mesh, batch_axes), 1)) * s
     cap = moe_lib.round_capacity(max(t_per_batch_shard, 1),
@@ -180,14 +221,17 @@ def _centralized(cfg, mesh, layer_p, x, batch_axes, n_shards, e_local):
                                  cfg.num_experts_padded, cfg.capacity_factor)
 
     if seq_shardable:
-        def body(router_w, experts, x_loc):
+        def body(router_w, experts, x_loc, tm_loc):
             bl, sl, dd = x_loc.shape
             # comm 1: gather the full token stream to every expert shard
             x_full = jax.lax.all_gather(x_loc, EXPERT_AXIS, axis=1, tiled=True)
             x2d = x_full.reshape(bl * sl * n_shards, dd)
+            tm_full = jax.lax.all_gather(tm_loc, EXPERT_AXIS, axis=1,
+                                         tiled=True)
             rout = router_lib.route(router_w, x2d, cfg.experts_per_token,
                                     norm_topk=cfg.router_norm_topk,
                                     n_valid_experts=cfg.num_experts)
+            rout = _mask_rout(rout, tm_full.reshape(bl * sl * n_shards), e_pad)
             e_start = jax.lax.axis_index(EXPERT_AXIS) * e_local
             y = _local_moe(cfg, experts, x2d, rout, e_start, cap)
             # comm 2: reduce partial sums and scatter back to sequence shards
@@ -195,62 +239,74 @@ def _centralized(cfg, mesh, layer_p, x, batch_axes, n_shards, e_local):
             y = jax.lax.psum_scatter(y, EXPERT_AXIS, scatter_dimension=1,
                                      tiled=True)
             aux = jax.lax.pmean(rout.aux_loss, (EXPERT_AXIS,) + tuple(batch_axes))
-            return y, aux
+            # every shard routed the full gathered stream — emit this
+            # shard's own sequence slice, globally reassembled by out_specs
+            ti = rout.top_idx.reshape(bl, sl * n_shards, cfg.experts_per_token)
+            ti = jax.lax.dynamic_slice_in_dim(
+                ti, jax.lax.axis_index(EXPERT_AXIS) * sl, sl, axis=1)
+            return y, aux, ti
 
-        return jax.shard_map(
+        return compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(), _expert_specs(EXPERT_AXIS),
-                      P(batch_axes, EXPERT_AXIS, None)),
-            out_specs=(P(batch_axes, EXPERT_AXIS, None), P()),
+                      P(batch_axes, EXPERT_AXIS, None),
+                      P(batch_axes, EXPERT_AXIS)),
+            out_specs=(P(batch_axes, EXPERT_AXIS, None), P(),
+                       P(batch_axes, EXPERT_AXIS, None)),
             check_vma=True,
-        )(layer_p["router"], layer_p["experts"], x)
+        )(layer_p["router"], layer_p["experts"], x, token_mask)
 
     # decode fallback: psum (comm 1) + value-preserving ring permute (comm 2)
-    def body(router_w, experts, x_loc):
+    def body(router_w, experts, x_loc, tm_loc):
         bl, sl, dd = x_loc.shape
         x2d = x_loc.reshape(bl * sl, dd)
         rout = router_lib.route(router_w, x2d, cfg.experts_per_token,
                                 norm_topk=cfg.router_norm_topk,
                                 n_valid_experts=cfg.num_experts)
+        rout = _mask_rout(rout, tm_loc.reshape(bl * sl), e_pad)
         e_start = jax.lax.axis_index(EXPERT_AXIS) * e_local
         y = _local_moe(cfg, experts, x2d, rout, e_start, cap)
         y = jax.lax.psum(y, EXPERT_AXIS)
         perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
         y = jax.lax.ppermute(y, EXPERT_AXIS, perm)  # identical values move
         aux = jax.lax.pmean(rout.aux_loss, batch_axes) if batch_axes else rout.aux_loss
-        return y.reshape(bl, sl, dd), aux
+        return (y.reshape(bl, sl, dd), aux,
+                rout.top_idx.reshape(bl, sl, cfg.experts_per_token))
 
     # check_vma=False: the ring ppermute moves identical values, so the
     # output *is* replicated over the expert axis, but VMA cannot prove it.
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
-        in_specs=(P(), _expert_specs(EXPERT_AXIS), P(batch_axes, None, None)),
-        out_specs=(P(batch_axes, None, None), P()),
+        in_specs=(P(), _expert_specs(EXPERT_AXIS), P(batch_axes, None, None),
+                  P(batch_axes, None)),
+        out_specs=(P(batch_axes, None, None), P(), P(batch_axes, None, None)),
         check_vma=False,
-    )(layer_p["router"], layer_p["experts"], x)
+    )(layer_p["router"], layer_p["experts"], x, token_mask)
 
 
 # ---------------------------------------------------------------------------
 # a2a (beyond paper): sequence-sharded tokens + all_to_all dispatch/combine
 # ---------------------------------------------------------------------------
 
-def _a2a(cfg, mesh, layer_p, x, batch_axes, n_shards, e_local):
+def _a2a(cfg, mesh, layer_p, x, token_mask, batch_axes, n_shards, e_local):
     b, s, d = x.shape
     if s % n_shards != 0:
         # single-token decode: fall back to the decentralized schedule
-        return _decentralized(cfg, mesh, layer_p, x, batch_axes, n_shards,
-                              e_local)
+        return _decentralized(cfg, mesh, layer_p, x, token_mask, batch_axes,
+                              n_shards, e_local)
     t_loc = (b // max(_axes_size(mesh, batch_axes), 1)) * (s // n_shards)
     # per-(source shard, expert) capacity
     cap = moe_lib.round_capacity(max(t_loc, 1), cfg.experts_per_token,
                                  cfg.num_experts_padded, cfg.capacity_factor)
 
-    def body(router_w, experts, x_loc):
+    def body(router_w, experts, x_loc, tm_loc):
         bl, sl, dd = x_loc.shape
         x2d = x_loc.reshape(bl * sl, dd)
         rout = router_lib.route(router_w, x2d, cfg.experts_per_token,
                                 norm_topk=cfg.router_norm_topk,
                                 n_valid_experts=cfg.num_experts)
+        rout = _mask_rout(rout, tm_loc.reshape(bl * sl),
+                          cfg.num_experts_padded)
         # build dispatch buffers for *all* experts, grouped by owner shard
         dispatch_tok, slot_valid, slot_of = moe_lib.make_dispatch_plan(
             rout.top_idx, cfg.num_experts_padded, 0,
@@ -274,12 +330,15 @@ def _a2a(cfg, mesh, layer_p, x, batch_axes, n_shards, e_local):
         y_tk = ye_pad[slot_of]
         y = jnp.einsum("tk,tkd->td", rout.top_w.astype(y_tk.dtype), y_tk)
         aux = jax.lax.pmean(rout.aux_loss, (EXPERT_AXIS,) + tuple(batch_axes))
-        return y.reshape(bl, sl, dd), aux
+        return (y.reshape(bl, sl, dd), aux,
+                rout.top_idx.reshape(bl, sl, cfg.experts_per_token))
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(), _expert_specs(EXPERT_AXIS),
-                  P(batch_axes, EXPERT_AXIS, None)),
-        out_specs=(P(batch_axes, EXPERT_AXIS, None), P()),
+                  P(batch_axes, EXPERT_AXIS, None),
+                  P(batch_axes, EXPERT_AXIS)),
+        out_specs=(P(batch_axes, EXPERT_AXIS, None), P(),
+                   P(batch_axes, EXPERT_AXIS, None)),
         check_vma=True,
-    )(layer_p["router"], layer_p["experts"], x)
+    )(layer_p["router"], layer_p["experts"], x, token_mask)

@@ -1,11 +1,19 @@
-"""Serving launcher: batched prefill+decode through the ServingEngine.
+"""Serving launcher: continuous batching through the redesigned ServingEngine
+(batched one-jit-call prefill, async decode, device-side routing capture).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
         --reduced --requests 8 --new-tokens 16
 
 Reports the paper's §5.2-style breakdown: prompt-evaluation and
 token-generation throughput, plus the measured E[#exec experts/node/layer]
-statistic that feeds the perf model (Table 1).
+statistic that feeds the perf model (Table 1).  The statistic is *exact*:
+it is computed from the routing decisions the device returns as auxiliary
+forward-pass outputs, not from a host-side router replay (the decode hot
+loop performs zero host-side router evaluations).
+
+``--legacy`` restores the seed engine's behaviour (per-request batch-1
+prefill, a blocking host sync every decode step) for A/B comparison —
+``python -m benchmarks.serving_engine`` automates that comparison.
 """
 from __future__ import annotations
 
@@ -19,19 +27,22 @@ from repro.serving.engine import EngineConfig, ServingEngine
 
 
 def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
-               max_batch: int = 4, seed: int = 0):
-    rng = np.random.default_rng(seed)
+               max_batch: int = 4, seed: int = 0, legacy: bool = False):
     eng = ServingEngine(cfg, EngineConfig(
         max_batch=max_batch, prefill_len=prompt_len,
-        max_cache=prompt_len + new_tokens + 8))
+        max_cache=prompt_len + new_tokens + 8,
+        batched_prefill=not legacy, async_steps=not legacy))
+    rng = np.random.default_rng(seed)
     for _ in range(requests):
         plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
         eng.submit(rng.integers(0, cfg.vocab_size, plen), new_tokens)
     done = eng.run_until_done()
     tp = eng.throughput()
-    print(f"completed {len(done)} requests")
+    mode = "legacy (seq prefill, sync)" if legacy else "batched + async"
+    print(f"completed {len(done)} requests [{mode}]")
     print(f"prompt-eval throughput : {tp['prefill_tok_per_s']:.1f} tok/s")
     print(f"generation throughput  : {tp['decode_tok_per_s']:.1f} tok/s")
+    print(f"overall throughput     : {tp['total_tok_per_s']:.1f} tok/s")
     if cfg.is_moe:
         for n in (2, 3, 4):
             e = eng.expected_experts_per_node(n)
@@ -51,13 +62,17 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--legacy", action="store_true",
+                    help="seed-engine behaviour: per-request prefill + "
+                         "per-step host sync (for A/B comparison)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     serve_demo(cfg, requests=args.requests, new_tokens=args.new_tokens,
-               prompt_len=args.prompt_len, max_batch=args.max_batch)
+               prompt_len=args.prompt_len, max_batch=args.max_batch,
+               legacy=args.legacy)
 
 
 if __name__ == "__main__":

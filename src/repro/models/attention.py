@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models import layers
 
 Array = jax.Array
@@ -148,7 +149,8 @@ def attn_init(key: Array, cfg, dtype) -> dict:
     return p
 
 
-def _project_qkv(p: dict, cfg, x: Array, positions, mrope_positions=None):
+def _project_qkv(p: dict, cfg, x: Array, positions, mrope_positions=None,
+                 mesh=None):
     b, s, _ = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = jnp.einsum("bsd,de->bse", x, p["wq"])
@@ -156,9 +158,13 @@ def _project_qkv(p: dict, cfg, x: Array, positions, mrope_positions=None):
     v = jnp.einsum("bsd,de->bse", x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
-    q = q.reshape(b, s, hq, hd)
-    k = k.reshape(b, s, hkv, hd)
-    v = v.reshape(b, s, hkv, hd)
+    # pin the head layout at the reshape: serve-mode wk/wv shard the
+    # flattened Hkv*hd dim, and letting GSPMD keep a mid-head split through
+    # the per-head norm/rope below miscompiles on jaxlib 0.4.x CPU SPMD
+    # (head_constrain replicates heads whenever H % tp != 0)
+    q = head_constrain(mesh, q.reshape(b, s, hq, hd))
+    k = head_constrain(mesh, k.reshape(b, s, hkv, hd))
+    v = head_constrain(mesh, v.reshape(b, s, hkv, hd))
     if cfg.qk_norm:
         q = layers.rms_norm(p["q_norm"], q)
         k = layers.rms_norm(p["k_norm"], k)
@@ -178,10 +184,16 @@ def _project_qkv(p: dict, cfg, x: Array, positions, mrope_positions=None):
 def head_constrain(mesh, t: Array) -> Array:
     """Pin (B, S, H, hd) activations to head sharding over the 'model' axis —
     forces GSPMD into head-parallel attention (logits (B, H/tp, Sq, Sk) per
-    device) instead of keeping sequence sharding through the softmax."""
+    device) instead of keeping sequence sharding through the softmax.
+
+    When the head count does not divide the axis the heads are pinned to
+    *replicated* instead of left to GSPMD: the propagated layout would split
+    single heads mid-``hd`` (serve-mode wk/wv shard the flattened Hkv*hd
+    dim), which is never a layout we want — and the jaxlib 0.4.x CPU SPMD
+    partitioner miscompiles per-head norm/rope over such a split."""
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return t
-    if t.ndim != 4 or t.shape[2] % mesh.shape["model"] != 0:
+    if t.ndim != 4:
         return t
     from jax.sharding import NamedSharding, PartitionSpec as P
     batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
@@ -189,18 +201,19 @@ def head_constrain(mesh, t: Array) -> Array:
     for a in batch_axes:
         nb *= mesh.shape[a]
     ba = batch_axes if (nb and t.shape[0] % nb == 0) else ()
+    head = "model" if t.shape[2] % mesh.shape["model"] == 0 else None
     return jax.lax.with_sharding_constraint(
-        t, NamedSharding(mesh, P(ba, None, "model", None)))
+        t, NamedSharding(mesh, P(ba, None, head, None)))
 
 
 def attn_forward(p: dict, cfg, x: Array, positions: Array, window: int | None,
                  mrope_positions: Array | None = None, mesh=None) -> Array:
     """x: (B, S, D); positions: (B, S) int32. Returns (B, S, D)."""
     b, s, _ = x.shape
-    q, k, v = _project_qkv(p, cfg, x, positions, mrope_positions)
+    q, k, v = _project_qkv(p, cfg, x, positions, mrope_positions, mesh)
     k = gqa_repeat(k, cfg.num_heads)
     v = gqa_repeat(v, cfg.num_heads)
-    q = head_constrain(mesh, q)
+    # q is already head-pinned inside _project_qkv; k/v changed head count
     k = head_constrain(mesh, k)
     v = head_constrain(mesh, v)
     if getattr(cfg, "use_flash_kernel", False):
@@ -280,12 +293,14 @@ def _update_cache(cache_kv: Array, new_kv: Array, lengths: Array, ring: bool) ->
 
 def attn_decode_step(p: dict, cfg, cache: dict, x: Array, lengths: Array,
                      window: int | None,
-                     mrope_positions: Array | None = None) -> tuple[Array, dict]:
+                     mrope_positions: Array | None = None,
+                     mesh=None) -> tuple[Array, dict]:
     """x: (B, 1, D); lengths: (B,) tokens already in cache. Returns (B,1,D), cache'."""
     b = x.shape[0]
     cache_len = cache["k"].shape[1]
     ring = window is not None and cache_len == window
-    q, k_new, v_new = _project_qkv(p, cfg, x, lengths[:, None], mrope_positions)
+    q, k_new, v_new = _project_qkv(p, cfg, x, lengths[:, None], mrope_positions,
+                                   mesh)
     if kv_quantized(cfg):
         kq, ks = quantize_kv(k_new)
         vq, vs = quantize_kv(v_new)
@@ -342,7 +357,8 @@ def attn_decode_step_cp(p: dict, cfg, cache: dict, x: Array, lengths: Array,
     cache_len = cache["k"].shape[1]
     tp = mesh.shape["model"]
     ring = window is not None and cache_len == window
-    q, k_new, v_new = _project_qkv(p, cfg, x, lengths[:, None], mrope_positions)
+    q, k_new, v_new = _project_qkv(p, cfg, x, lengths[:, None], mrope_positions,
+                                   mesh)
     quant = kv_quantized(cfg)
     if quant:
         kq, ksc = quantize_kv(k_new)
@@ -418,7 +434,7 @@ def attn_decode_step_cp(p: dict, cfg, cache: dict, x: Array, lengths: Array,
     rep = jax.tree.map(lambda a: P(*([ba] + [None] * (a.ndim - 1))), new_tree)
     shd = jax.tree.map(lambda a: P(ba, "model", *([None] * (a.ndim - 2))),
                        cache_tree)
-    out, new_cache = jax.shard_map(
+    out, new_cache = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(ba, None, None, None), rep, shd, P(ba)),
         out_specs=(P(ba, None, None, None), shd),
@@ -446,10 +462,10 @@ def attn_prefill(p: dict, cfg, cache: dict, x: Array, positions: Array,
     when S <= cache_len; for ring caches the last `window` tokens are kept)."""
     b, s, _ = x.shape
     cache_len = cache["k"].shape[1]
-    q, k, v = _project_qkv(p, cfg, x, positions, mrope_positions)
+    q, k, v = _project_qkv(p, cfg, x, positions, mrope_positions, mesh)
     kr = gqa_repeat(k, cfg.num_heads)
     vr = gqa_repeat(v, cfg.num_heads)
-    q = head_constrain(mesh, q)
+    # q is already head-pinned inside _project_qkv; kr/vr changed head count
     kr = head_constrain(mesh, kr)
     vr = head_constrain(mesh, vr)
     if s >= CHUNK_THRESHOLD:

@@ -7,6 +7,21 @@ points used by the launcher, serving engine, tests and benchmarks.
   prefill(params, batch, cache, mesh)-> (logits_last, cache)
   decode_step(params, cache, batch, mesh) -> (logits, cache)    one token
   cache_specs(batch, cache_len)      -> ShapeDtypeStruct pytree
+
+Routing-capture variants (device-side aux outputs, zero extra router
+evaluations — the serving engine's hot loop consumes these so expert
+statistics never require a host-side router replay):
+
+  prefill_routed(params, batch, cache, mesh)
+      -> (logits_last, cache, routing)   routing: (L, B*S, K) int32 | None
+  decode_step_routed(params, cache, batch, mesh)
+      -> (logits, cache, routing)        routing: (L, B, K) int32 | None
+
+Both routed entry points honour an optional ``batch["token_mask"]``
+((B, S) bool): False tokens are dead-routed past the MoE dispatch so they
+consume no expert capacity (how the serving engine's batched prefill keeps
+garbage/in-flight rows from perturbing real requests); their ``routing``
+entries read E_pad.
 """
 from __future__ import annotations
 
@@ -39,6 +54,8 @@ class Model:
     decode_step: Callable
     cache_specs: Callable
     init_cache: Callable
+    prefill_routed: Callable
+    decode_step_routed: Callable
 
 
 def _embed_inputs(cfg, params, batch) -> tuple[Array, Array, Array | None, Array]:
@@ -141,16 +158,21 @@ def build_model(cfg) -> Model:
         return transformer.init_stack_cache(cfg, batch, cache_len, dt)
 
     # ---- prefill ------------------------------------------------------------
-    def prefill(params, batch, cache, mesh=None):
+    def prefill_routed(params, batch, cache, mesh=None):
         x, pos, mrope, _ = _embed_inputs(cfg, params, batch)
         window = transformer.effective_window(cfg, x.shape[1])
-        x, cache = transformer.prefill_stack(cfg, mesh, params["blocks"], x,
-                                             pos, cache, window, mrope)
+        x, cache, routing = transformer.prefill_stack(
+            cfg, mesh, params["blocks"], x, pos, cache, window, mrope,
+            token_mask=batch.get("token_mask"))
         x = layers.norm_apply(cfg.norm, params["final_norm"], x[:, -1:])
-        return _lm_head(cfg, params, x), cache
+        return _lm_head(cfg, params, x), cache, routing
+
+    def prefill(params, batch, cache, mesh=None):
+        logits, cache, _ = prefill_routed(params, batch, cache, mesh)
+        return logits, cache
 
     # ---- decode -------------------------------------------------------------
-    def decode_step(params, cache, batch, mesh=None, context_len=None):
+    def decode_step_routed(params, cache, batch, mesh=None, context_len=None):
         tok = jnp.clip(batch["tokens"], 0, cfg.vocab_size - 1)
         x = jnp.take(params["embed"], tok, axis=0).astype(dt)
         lengths = batch["lengths"]
@@ -161,14 +183,19 @@ def build_model(cfg) -> Model:
         cache_len = _attn_cache_len(cfg, cache)
         window = (transformer.effective_window(cfg, context_len or cache_len)
                   if cache_len is not None else cfg.sliding_window)
-        x, cache = transformer.decode_stack(cfg, mesh, params["blocks"], x,
-                                            lengths, cache, window,
-                                            batch.get("mrope_positions"))
+        x, cache, routing = transformer.decode_stack(
+            cfg, mesh, params["blocks"], x, lengths, cache, window,
+            batch.get("mrope_positions"), token_mask=batch.get("token_mask"))
         x = layers.norm_apply(cfg.norm, params["final_norm"], x)
-        return _lm_head(cfg, params, x), cache
+        return _lm_head(cfg, params, x), cache, routing
+
+    def decode_step(params, cache, batch, mesh=None, context_len=None):
+        logits, cache, _ = decode_step_routed(params, cache, batch, mesh,
+                                              context_len)
+        return logits, cache
 
     return Model(cfg, init, forward, loss, prefill, decode_step,
-                 cache_specs, init_cache)
+                 cache_specs, init_cache, prefill_routed, decode_step_routed)
 
 
 def _attn_cache_len(cfg, cache) -> int | None:

@@ -142,8 +142,13 @@ def init_blocks(cfg, key) -> dict:
 # ---------------------------------------------------------------------------
 
 def _attn_mlp_block(cfg, mesh, layer_p, x, positions, window, mrope_pos,
-                    cache_l=None, decode=False):
-    """Generic attention(+cache) + {mlp | moe} block. Returns (x, new_cache, aux)."""
+                    cache_l=None, decode=False, token_mask=None):
+    """Generic attention(+cache) + {mlp | moe} block.
+
+    Returns (x, new_cache, aux, routed) where ``routed`` is the MoE layer's
+    per-token routing decision ((B*S, K) int32, see expert_parallel.moe_layer)
+    or None for non-MoE families.  ``token_mask`` (B, S) bool marks tokens
+    that may consume expert capacity (batched prefill masks garbage rows)."""
     h = layers.norm_apply(cfg.norm, layer_p["ln1"], x)
     if decode:
         if attention.use_cp_decode(cfg, mesh, cache_l["k"].shape[1]):
@@ -152,7 +157,8 @@ def _attn_mlp_block(cfg, mesh, layer_p, x, positions, window, mrope_pos,
                 mrope_pos)
         else:
             h, new_cache = attention.attn_decode_step(
-                layer_p["attn"], cfg, cache_l, h, positions, window, mrope_pos)
+                layer_p["attn"], cfg, cache_l, h, positions, window, mrope_pos,
+                mesh=mesh)
     elif cache_l is not None:
         pos2d = positions if positions.ndim == 2 else positions[None]
         h, new_cache = attention.attn_prefill(
@@ -172,13 +178,15 @@ def _attn_mlp_block(cfg, mesh, layer_p, x, positions, window, mrope_pos,
     h = layers.norm_apply(cfg.norm, layer_p["ln2"], x)
     if cfg.family == "moe":
         moe_p = {"router": layer_p["router"], "experts": layer_p["experts"]}
-        h, aux = expert_parallel.moe_layer(cfg, mesh, moe_p, h)
+        h, aux, routed = expert_parallel.moe_layer(cfg, mesh, moe_p, h,
+                                                   token_mask)
     else:
         h = layers.mlp_apply(layer_p["mlp"], h, cfg.act)
         aux = jnp.zeros((), jnp.float32)
+        routed = None
     if not decode:
         h = seq_constrain(mesh, h)
-    return x + h, new_cache, aux
+    return x + h, new_cache, aux, routed
 
 
 def _ssm_block(cfg, layer_p, x, cache_l=None, decode=False):
@@ -214,7 +222,7 @@ def _hybrid_block(cfg, layer_p, kind, x, positions, cache_l=None, decode=False,
                     layer_p["mix"], cfg, cache_l, h, positions, w, mesh)
             else:
                 h, new_cache = attention.attn_decode_step(
-                    layer_p["mix"], cfg, cache_l, h, positions, w)
+                    layer_p["mix"], cfg, cache_l, h, positions, w, mesh=mesh)
         elif cache_l is not None:
             pos2d = positions if positions.ndim == 2 else positions[None]
             h, new_cache = attention.attn_prefill(layer_p["mix"], cfg, cache_l,
@@ -259,8 +267,9 @@ def forward_stack(cfg, mesh, blocks, x, positions, window, mrope_pos=None):
             return out, aux
     else:
         def body(xx, lp):
-            out, _, aux = _attn_mlp_block(cfg, mesh, lp, seq_constrain(mesh, xx),
-                                          positions, window, mrope_pos)
+            out, _, aux, _ = _attn_mlp_block(cfg, mesh, lp,
+                                             seq_constrain(mesh, xx),
+                                             positions, window, mrope_pos)
             return out, aux
 
     if cfg.prestack:
@@ -322,8 +331,13 @@ def effective_window(cfg, seq_len: int) -> int | None:
 
 
 def decode_stack(cfg, mesh, blocks, x, lengths, cache, window,
-                 mrope_pos=None):
-    """One-token decode through all layers. x: (B,1,D)."""
+                 mrope_pos=None, token_mask=None):
+    """One-token decode through all layers. x: (B,1,D).
+
+    Returns (x, new_cache, routing) — ``routing`` is the stacked per-layer
+    MoE decision (L, B, K) int32 for the moe family, else None.  It rides
+    out of the scan as a ys output, so capturing it costs no extra router
+    evaluation (the serving engine's tracker consumes it device-side)."""
     if cfg.family == "hybrid":
         pat = hybrid_pattern(cfg)
         new_rec, new_attn = [], []
@@ -344,27 +358,32 @@ def decode_stack(cfg, mesh, blocks, x, lengths, cache, window,
                 new_attn.append(nc)
                 ai += 1
         stack = lambda lst: jax.tree.map(lambda *a: jnp.stack(a), *lst)
-        return x, {"rec": stack(new_rec), "attn": stack(new_attn)}
+        return x, {"rec": stack(new_rec), "attn": stack(new_attn)}, None
 
     if cfg.family == "ssm":
         def body(xx, inp):
             lp, cl = inp
             out, nc, _ = _ssm_block(cfg, lp, xx, cl, decode=True)
-            return out, nc
+            return out, (nc, None)
     else:
         def body(xx, inp):
             lp, cl = inp
-            out, nc, _ = _attn_mlp_block(cfg, mesh, lp, xx, lengths, window,
-                                         mrope_pos, cl, decode=True)
-            return out, nc
+            out, nc, _, routed = _attn_mlp_block(cfg, mesh, lp, xx, lengths,
+                                                 window, mrope_pos, cl,
+                                                 decode=True,
+                                                 token_mask=token_mask)
+            return out, (nc, routed)
 
-    x, new_cache = jax.lax.scan(body, x, (blocks, cache))
-    return x, new_cache
+    x, (new_cache, routing) = jax.lax.scan(body, x, (blocks, cache))
+    return x, new_cache, routing
 
 
 def prefill_stack(cfg, mesh, blocks, x, positions, cache, window,
-                  mrope_pos=None):
-    """Full-sequence forward that fills the cache."""
+                  mrope_pos=None, token_mask=None):
+    """Full-sequence forward that fills the cache.
+
+    Returns (x, new_cache, routing) — ``routing`` is (L, B*S, K) int32 for
+    the moe family (per-layer device-side routing capture), else None."""
     if cfg.family == "hybrid":
         pat = hybrid_pattern(cfg)
         new_rec, new_attn = [], []
@@ -386,19 +405,21 @@ def prefill_stack(cfg, mesh, blocks, x, positions, cache, window,
                 new_attn.append(nc)
                 ai += 1
         stack = lambda lst: jax.tree.map(lambda *a: jnp.stack(a), *lst)
-        return x, {"rec": stack(new_rec), "attn": stack(new_attn)}
+        return x, {"rec": stack(new_rec), "attn": stack(new_attn)}, None
 
     if cfg.family == "ssm":
         def body(xx, inp):
             lp, cl = inp
             out, nc, _ = _ssm_block(cfg, lp, seq_constrain(mesh, xx), cl)
-            return out, nc
+            return out, (nc, None)
     else:
         def body(xx, inp):
             lp, cl = inp
-            out, nc, _ = _attn_mlp_block(cfg, mesh, lp, seq_constrain(mesh, xx),
-                                         positions, window, mrope_pos, cl)
-            return out, nc
+            out, nc, _, routed = _attn_mlp_block(cfg, mesh, lp,
+                                                 seq_constrain(mesh, xx),
+                                                 positions, window, mrope_pos,
+                                                 cl, token_mask=token_mask)
+            return out, (nc, routed)
 
-    x, new_cache = jax.lax.scan(body, x, (blocks, cache))
-    return x, new_cache
+    x, (new_cache, routing) = jax.lax.scan(body, x, (blocks, cache))
+    return x, new_cache, routing

@@ -1,20 +1,50 @@
-"""Serving engine: batched prefill + decode with request scheduling and the
-paper's host-side L_R policy artifacts.
+"""Serving engine: continuous batching with batched prefill, async decode
+and device-side routing capture.
 
 The paper's system serves a single user; this engine generalizes to batched
-requests while keeping the paper's structure visible:
+requests while keeping the paper's structure visible, and makes the hot
+loop production-shaped:
 
-  * prefill and decode are separate jit'd entry points (the paper's "prompt
-    evaluation" vs "token generation" phases, reported separately in §5.2);
-  * the ``LRUExpertTracker`` observes per-layer routing decisions of every
-    step and exposes E[#exec experts/node/layer] — the measured statistic
-    that parameterizes the perf model (Table 1);
-  * a ``standby`` hook reproduces the paper's keep-warm trick (a summing
-    touch over every expert's weights between requests).  On TPU it is a
-    no-op for correctness but is kept (and tested) as the faithful policy.
+  * **Batched prefill** — every engine iteration admits *all* queued
+    requests into free decode slots with ONE jit call: the full-batch
+    prefill runs over a (max_batch, prefill_len) token matrix and the
+    resulting caches are merged row-wise under an admit mask, so in-flight
+    slots are untouched.  (``EngineConfig.batched_prefill=False`` restores
+    the legacy one-jit-call-per-request scatter prefill as a reference /
+    baseline mode.)
+  * **Device-side routing capture** — the forward pass returns every MoE
+    layer's actual top-k decision as an auxiliary output
+    (``Model.prefill_routed`` / ``decode_step_routed``; see
+    ``core/expert_parallel.moe_layer``), and ``LRUExpertTracker`` consumes
+    those.  The decode hot loop performs **zero host-side router
+    evaluations**; the paper's Table-1 statistic
+    ``E[#exec experts/node/layer]`` is exact, not a layer-0 embedding
+    proxy.
+  * **Async stepping** — decode steps are dispatched without
+    ``block_until_ready``; per-step tokens and routing stay on device in a
+    pending buffer and the host syncs only at request-completion
+    boundaries (or on ``flush()``), overlapping host scheduling with
+    device compute.  Budget-based termination means doneness never depends
+    on token *values*, so the host can run ahead freely.
+    (``EngineConfig.async_steps=False`` syncs every step — reference
+    mode.)
+
+Other paper artifacts are unchanged: ``standby`` reproduces the keep-warm
+summing touch (§4.2) and the tracker's LRU structure is the faithful L_R
+host half.
 
 Static-shape serving: requests are right-padded to the slot length; the
 scheduler packs arrivals into fixed decode slots (continuous batching).
+
+Batch-capacity semantics (``moe_strategy="dispatch"``): per-expert dispatch
+capacity scales with the whole admitted batch, so requests batched together
+share one capacity pool — garbage/inactive rows are dead-routed via a
+``token_mask`` and consume none of it, but real rows can admit tokens a
+batch-1 dispatch would have dropped.  Token-for-token equality between
+batched and sequential prefill is therefore exact whenever capacity is not
+binding (the engine's intended serving regime, and always for
+``moe_strategy="dense"``); under capacity pressure the pooled dispatch is
+the intended continuous-batching behaviour, not a bug.
 """
 from __future__ import annotations
 
@@ -28,7 +58,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dynamic_load import LRUExpertTracker
-from repro.core import router as router_lib
 from repro.models.model import build_model
 
 Array = jax.Array
@@ -49,9 +78,26 @@ class EngineConfig:
     max_batch: int = 8            # decode slots
     prefill_len: int = 128        # prompts padded/truncated to this
     max_cache: int = 256          # KV/state cache length
-    greedy: bool = True
-    temperature: float = 1.0
     track_experts: bool = True
+    batched_prefill: bool = True  # False: legacy per-request prefill
+    async_steps: bool = True      # False: block_until_ready every step
+
+
+@dataclasses.dataclass(frozen=True)
+class _Pending:
+    """One dispatched-but-unharvested device step.
+
+    ``rows`` binds batch rows to their requests *at dispatch time* (slots
+    may be re-assigned before the harvest sync).  ``tok`` is the post-step
+    (B,) last-token vector; ``routing`` the (L, T, K) device capture (None
+    for dense archs / disabled tracking).  ``routing_batch`` is the batch
+    size of the dispatched call (1 for the legacy batch-1 prefill, whose
+    capture row is always 0)."""
+    kind: str                     # "prefill" | "decode"
+    rows: tuple                   # ((row_in_routing, slot, Request), ...)
+    tok: Any
+    routing: Any
+    routing_batch: int
 
 
 class ServingEngine:
@@ -83,33 +129,68 @@ class ServingEngine:
         self.cache = self.model.init_cache(b, c)
         self.lengths = np.zeros((b,), np.int32)
         self.budgets = np.zeros((b,), np.int32)
-        self.last_tok = np.zeros((b,), np.int32)
+        self.last_tok = jnp.zeros((b,), jnp.int32)
+        self._pending: list[_Pending] = []
+        self._jit_prefill_batch = jax.jit(self._prefill_batch)
         self._jit_prefill_one = jax.jit(self._prefill_one)
         self._jit_decode = jax.jit(self._decode)
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
-                      "decode_tokens": 0, "prefill_s": 0.0, "decode_s": 0.0}
+                      "decode_tokens": 0, "prefill_s": 0.0, "decode_s": 0.0,
+                      "harvest_s": 0.0, "harvests": 0}
 
     # -- jit bodies ---------------------------------------------------------
 
-    def _prefill_one(self, params, cache, tokens, slot):
-        """Prefill one request into batch row ``slot`` of the engine cache.
+    def _greedy_next(self, logits: Array) -> Array:
+        return jnp.argmax(logits[:, :self.cfg.vocab_size],
+                          axis=-1).astype(jnp.int32)
 
-        tokens: (1, prefill_len). Runs a batch-1 prefill then scatters the
-        resulting per-layer cache rows into the engine-wide cache."""
+    def _prefill_batch(self, params, cache, tokens, admit_mask, last_tok):
+        """Admit up to max_batch requests in ONE call.
+
+        tokens: (B, prefill_len) — zeros on non-admitted rows;
+        admit_mask: (B,) bool.  The full-batch prefill recomputes every row
+        (static shapes, one XLA program); the cache is then merged row-wise
+        so in-flight slots keep their state.  Returns (last_tok', cache',
+        routing) with last_tok' holding each admitted row's first sampled
+        token."""
+        tmask = jnp.broadcast_to(admit_mask[:, None], tokens.shape)
+        logits, new_cache, routing = self.model.prefill_routed(
+            params, {"tokens": tokens, "token_mask": tmask}, cache, self.mesh)
+        nxt = self._greedy_next(logits[:, -1])
+
+        def merge(old, new):
+            if old.ndim < 2:      # scalar bookkeeping leaves, if any
+                return new
+            m = admit_mask.reshape((1, old.shape[1]) + (1,) * (old.ndim - 2))
+            return jnp.where(m, new, old)
+
+        cache = jax.tree.map(merge, cache, new_cache)
+        last_tok = jnp.where(admit_mask, nxt, last_tok)
+        return last_tok, cache, routing
+
+    def _prefill_one(self, params, cache, tokens, slot, last_tok):
+        """Legacy reference path: batch-1 prefill scattered into ``slot``."""
         one_cache = jax.tree.map(
             lambda a: jnp.zeros((a.shape[0], 1) + a.shape[2:], a.dtype)
             if a.ndim >= 2 else a, cache)
-        logits, one_cache = self.model.prefill(params, {"tokens": tokens},
-                                               one_cache, self.mesh)
+        logits, one_cache, routing = self.model.prefill_routed(
+            params, {"tokens": tokens}, one_cache, self.mesh)
         cache = jax.tree.map(
             lambda full, one: jax.lax.dynamic_update_index_in_dim(
                 full, one[:, 0], slot, axis=1), cache, one_cache)
-        return logits[:, -1], cache
+        nxt = self._greedy_next(logits[:, -1])  # (1,)
+        last_tok = jax.lax.dynamic_update_index_in_dim(
+            last_tok, nxt[0], slot, axis=0)
+        return last_tok, cache, routing
 
-    def _decode(self, params, cache, tokens, lengths):
-        logits, cache = self.model.decode_step(
-            params, cache, {"tokens": tokens, "lengths": lengths}, self.mesh)
-        return logits[:, -1], cache
+    def _decode(self, params, cache, last_tok, lengths, active_mask):
+        logits, cache, routing = self.model.decode_step_routed(
+            params, cache, {"tokens": last_tok[:, None], "lengths": lengths,
+                            "token_mask": active_mask[:, None]},
+            self.mesh)
+        nxt = self._greedy_next(logits[:, -1])
+        last_tok = jnp.where(active_mask, nxt, last_tok)
+        return last_tok, cache, routing
 
     # -- public API ---------------------------------------------------------
 
@@ -120,75 +201,154 @@ class ServingEngine:
         self._all[req.uid] = req
         return self._uid
 
+    def _pad_prompt(self, req: Request) -> np.ndarray:
+        p = req.prompt[-self.ecfg.prefill_len:]
+        pad = np.zeros((self.ecfg.prefill_len,), np.int32)
+        pad[:len(p)] = p
+        return pad
+
     def _admit(self) -> None:
-        for slot in range(self.ecfg.max_batch):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            p = req.prompt[-self.ecfg.prefill_len:]
-            pad = np.zeros((self.ecfg.prefill_len,), np.int32)
-            pad[:len(p)] = p
-            t0 = time.perf_counter()
-            logits, self.cache = self._jit_prefill_one(
-                self.params, self.cache, pad[None], slot)
-            logits.block_until_ready()
-            self.stats["prefill_s"] += time.perf_counter() - t0
-            self.stats["prefill_tokens"] += self.ecfg.prefill_len
-            tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
-            req.generated.append(tok)
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        if not free or not self.queue:
+            return
+        if self.ecfg.batched_prefill:
+            self._admit_batched(free)
+        else:
+            self._admit_sequential(free)
+
+    def _post_admit(self, rows, routing, routing_batch: int) -> None:
+        for _, slot, req in rows:
             self.slots[slot] = req
             self.lengths[slot] = self.ecfg.prefill_len
             self.budgets[slot] = req.max_new_tokens - 1
-            self.last_tok[slot] = tok
-            self._observe_routing(pad[None])
+            self.stats["prefill_tokens"] += self.ecfg.prefill_len
+        self._pending.append(_Pending("prefill", tuple(rows), self.last_tok,
+                                      routing, routing_batch))
+        if not self.ecfg.async_steps:
+            self._harvest()
 
-    def _observe_routing(self, tokens: np.ndarray) -> None:
-        """Host-side L_R bookkeeping: per-layer expert hits for this batch."""
-        if self.tracker is None:
-            return
-        # cheap host-side router replay on the embedding (layer-0 proxy per
-        # layer is exact for the router inputs we track: we use each layer's
-        # router over the running hidden state only in tests; here we track
-        # layer-0 embeddings as the paper's statistic is layer-averaged).
-        emb = np.asarray(jax.device_get(
-            jnp.take(self.params["embed"],
-                     jnp.clip(tokens, 0, self.cfg.vocab_size - 1), axis=0)))
-        x = jnp.asarray(emb.reshape(-1, self.cfg.d_model))
-        blocks = self.params["blocks"]
-        for layer in range(self.cfg.num_layers):
-            rw = jax.tree.map(lambda a: a[layer], blocks["router"])
-            out = router_lib.route(rw, x, self.cfg.experts_per_token,
-                                   n_valid_experts=self.cfg.num_experts)
-            self.tracker.observe(layer, np.asarray(out.top_idx).reshape(-1))
-        self.tracker.tick()
+    def _admit_batched(self, free: list[int]) -> None:
+        rows = []
+        tokens = np.zeros((self.ecfg.max_batch, self.ecfg.prefill_len),
+                          np.int32)
+        admit = np.zeros((self.ecfg.max_batch,), bool)
+        for slot in free:
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            tokens[slot] = self._pad_prompt(req)
+            admit[slot] = True
+            rows.append((slot, slot, req))
+        t0 = time.perf_counter()
+        # tokens/admit are freshly built per call and never mutated after
+        # dispatch (see the transfer note in step())
+        self.last_tok, self.cache, routing = self._jit_prefill_batch(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(admit),
+            self.last_tok)
+        if not self.ecfg.async_steps:
+            self.last_tok.block_until_ready()
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self._post_admit(rows, routing, self.ecfg.max_batch)
+
+    def _admit_sequential(self, free: list[int]) -> None:
+        for slot in free:
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            tokens = self._pad_prompt(req)[None]
+            t0 = time.perf_counter()
+            self.last_tok, self.cache, routing = self._jit_prefill_one(
+                self.params, self.cache, jnp.asarray(tokens), slot,
+                self.last_tok)
+            if not self.ecfg.async_steps:
+                self.last_tok.block_until_ready()
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            self._post_admit([(0, slot, req)], routing, 1)
 
     def step(self) -> int:
-        """One engine iteration: admit + one decode step. Returns #active."""
+        """One engine iteration: admit + one decode step. Returns #active.
+
+        In async mode the device step is only *dispatched* here; tokens are
+        appended to requests at the next harvest boundary (a request
+        finishing, ``flush()``, or sync mode)."""
         self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return 0
-        toks = jnp.asarray(self.last_tok[:, None])
-        lens = jnp.asarray(self.lengths)
+        mask = np.zeros((self.ecfg.max_batch,), bool)
+        mask[active] = True
         t0 = time.perf_counter()
-        logits, self.cache = self._jit_decode(self.params, self.cache,
-                                              toks, lens)
-        logits.block_until_ready()
+        # NB: self.lengths is handed to the device as a host-side SNAPSHOT
+        # (.copy()) that nothing mutates afterwards.  The host→device
+        # transfer is itself deferred on jaxlib 0.4.x CPU — even
+        # jnp.array's copy can read the source buffer *after* the
+        # `self.lengths[i] += 1` below, which under CPU load produced
+        # stale-length decodes (KV written over the previous slot,
+        # repeated tokens).  mask/tokens buffers are freshly built per
+        # call and never mutated after dispatch, so they are safe as-is.
+        self.last_tok, self.cache, routing = self._jit_decode(
+            self.params, self.cache, self.last_tok,
+            jnp.asarray(self.lengths.copy()), jnp.asarray(mask))
+        if not self.ecfg.async_steps:
+            self.last_tok.block_until_ready()
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_steps"] += 1
-        nxt = np.asarray(jnp.argmax(logits[:, :self.cfg.vocab_size], axis=-1))
-        self._observe_routing(self.last_tok[:, None])
+        rows = tuple((i, i, self.slots[i]) for i in active)
+        self._pending.append(_Pending("decode", rows, self.last_tok, routing,
+                                      self.ecfg.max_batch))
+        finishing = False
         for i in active:
-            req = self.slots[i]
             self.lengths[i] = min(self.lengths[i] + 1, self.ecfg.max_cache)
             self.stats["decode_tokens"] += 1
-            req.generated.append(int(nxt[i]))
-            self.last_tok[i] = int(nxt[i])
             self.budgets[i] -= 1
             if self.budgets[i] <= 0:
-                req.done = True
+                # budget-based completion is host-known at dispatch time:
+                # free the slot now, collect the tokens at the harvest below
                 self.slots[i] = None
+                finishing = True
+        if finishing or not self.ecfg.async_steps:
+            self._harvest()
         return len(active)
+
+    # -- harvest: the only device sync in the loop --------------------------
+
+    def _harvest(self) -> None:
+        """Fetch all pending step outputs and apply them to requests/tracker
+        in dispatch order.  Each record is fetched with its own timed
+        ``device_get`` — computations complete in dispatch order, so the
+        per-record wait IS that step's remaining device time, giving an
+        honest prefill/decode split of the async pipeline's wall clock."""
+        if not self._pending:
+            return
+        recs, self._pending = self._pending, []
+        self.stats["harvests"] += 1
+        for rec in recs:
+            t0 = time.perf_counter()
+            tok, routing = jax.device_get((rec.tok, rec.routing))
+            dt = time.perf_counter() - t0
+            self.stats["harvest_s"] += dt
+            self.stats["prefill_s" if rec.kind == "prefill" else
+                       "decode_s"] += dt
+            for _, slot, req in rec.rows:
+                req.generated.append(int(tok[slot]))
+                if len(req.generated) >= req.max_new_tokens:
+                    req.done = True
+            self._observe_routing(rec, routing)
+
+    def _observe_routing(self, rec: _Pending, routing) -> None:
+        """Feed the tracker from the device capture (host does NO routing)."""
+        if self.tracker is None or routing is None:
+            return
+        # prefill: (L, B*S, K) -> (L, B, S*K); decode: (L, B, K) unchanged
+        per_row = routing.reshape(routing.shape[0], rec.routing_batch, -1)
+        row_ids = [row for row, _, _ in rec.rows]
+        for layer in range(self.cfg.num_layers):
+            self.tracker.observe(layer, per_row[layer, row_ids])
+        self.tracker.tick()
+
+    def flush(self) -> None:
+        """Sync: harvest every dispatched-but-unapplied step."""
+        self._harvest()
 
     def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
         done: list[Request] = []
@@ -202,6 +362,11 @@ class ServingEngine:
                 if r.done and r.uid not in seen:
                     seen.add(r.uid)
                     done.append(r)
+        self.flush()
+        for r in self._all.values():
+            if r.done and r.uid not in seen:
+                seen.add(r.uid)
+                done.append(r)
         return done
 
     # -- paper policy artifacts ---------------------------------------------
@@ -215,14 +380,21 @@ class ServingEngine:
         return sum(jnp.sum(w.astype(jnp.float32)) for w in jax.tree.leaves(ex))
 
     def expected_experts_per_node(self, n_nodes: int) -> float:
-        """Measured Table-1 statistic from the tracker."""
+        """Measured Table-1 statistic from the tracker (exact: computed from
+        the device-captured routing decisions of every served step)."""
         if self.tracker is None:
             return float("nan")
+        self.flush()
         return self.tracker.mean_executed_per_node(n_nodes)
 
     def throughput(self) -> dict:
+        """Per-phase tok/s.  ``prefill_s``/``decode_s`` hold dispatch time
+        plus each phase's harvest wait (see _harvest), so the split is
+        meaningful in async mode too; ``total`` is the combined rate."""
         s = self.stats
         return {
             "prefill_tok_per_s": s["prefill_tokens"] / max(s["prefill_s"], 1e-9),
             "decode_tok_per_s": s["decode_tokens"] / max(s["decode_s"], 1e-9),
+            "total_tok_per_s": (s["prefill_tokens"] + s["decode_tokens"])
+                               / max(s["prefill_s"] + s["decode_s"], 1e-9),
         }

@@ -1,0 +1,48 @@
+"""Minimal stand-in for the ``hypothesis`` API surface this suite uses.
+
+``requirements-dev.txt`` installs the real library; where it is absent
+(e.g. a hermetic container) the property tests degrade gracefully to a
+fixed number of deterministic pseudo-random samples instead of erroring at
+collection.  Only the strategies the suite actually uses are implemented:
+``st.integers`` and ``st.sampled_from``.
+"""
+from __future__ import annotations
+
+
+import numpy as np
+
+FALLBACK_EXAMPLES = 5          # cap per test when running without hypothesis
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return lambda rng: int(rng.integers(min_value, max_value + 1))
+
+    @staticmethod
+    def sampled_from(elements):
+        xs = list(elements)
+        return lambda rng: xs[int(rng.integers(0, len(xs)))]
+
+
+def given(**strats):
+    def deco(test):
+        # NB: no functools.wraps — pytest must see a zero-arg signature,
+        # not the original one (it would treat drawn params as fixtures).
+        def wrapper():
+            n = min(getattr(wrapper, "_max_examples", FALLBACK_EXAMPLES),
+                    FALLBACK_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                test(**{k: draw(rng) for k, draw in strats.items()})
+        wrapper.__name__ = test.__name__
+        wrapper.__doc__ = test.__doc__
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = FALLBACK_EXAMPLES, **_ignored):
+    def deco(test):
+        test._max_examples = max_examples
+        return test
+    return deco

@@ -48,10 +48,13 @@ def check_expert_parallel_schedules():
             for strat in ("dispatch", "dense"):
                 c = cfg.replace(expert_parallel=ep, moe_strategy=strat,
                                 capacity_factor=8.0)
-                y, aux = expert_parallel.moe_layer(c, mesh, layer_p, x)
+                y, aux, ti = expert_parallel.moe_layer(c, mesh, layer_p, x)
                 err = float(jnp.max(jnp.abs(y - y_ref)))
                 assert err < 1e-4, (ep, strat, s, err)
                 assert np.isfinite(float(aux))
+                # device-captured routing == single-device router decisions
+                np.testing.assert_array_equal(np.asarray(ti),
+                                              np.asarray(rout.top_idx))
     print("PASS expert_parallel_schedules")
 
 
@@ -209,7 +212,7 @@ def check_padded_experts_dead_on_mesh():
                                   rout.top_w).reshape(4, 8, d)
     for ep in ("decentralized", "centralized", "a2a"):
         c = cfg.replace(expert_parallel=ep)
-        y, _ = expert_parallel.moe_layer(c, mesh, layer_p, x)
+        y, _, _ = expert_parallel.moe_layer(c, mesh, layer_p, x)
         err = float(jnp.max(jnp.abs(y - y_ref)))
         assert err < 1e-4, (ep, err)
     print("PASS padded_experts")
@@ -238,11 +241,11 @@ def check_expert_replication_overlap():
                                   rout.top_w).reshape(2, 16, d)
 
     # r=1 baseline
-    y1, _ = expert_parallel.moe_layer(
+    y1, _, _ = expert_parallel.moe_layer(
         cfg, mesh, {"router": router_w, "experts": experts}, x)
     # r=2 overlapping placement (duplicated expert stack)
     dup = jax.tree.map(lambda a: jnp.concatenate([a, a], axis=0), experts)
-    y2, _ = expert_parallel.moe_layer(
+    y2, _, _ = expert_parallel.moe_layer(
         cfg.replace(expert_replication=2), mesh,
         {"router": router_w, "experts": dup}, x)
     for name, y in (("r1", y1), ("r2", y2)):

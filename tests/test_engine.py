@@ -1,0 +1,214 @@
+"""Serving-engine redesign: batched prefill, async stepping, device-side
+routing capture (ISSUE 1 tentpole).
+
+The reference modes live in the engine itself (``EngineConfig`` flags), so
+equality tests compare the production path against the legacy seed
+behaviour bit-for-bit on the same params.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import router as router_lib
+from repro.core.dynamic_load import LRUExpertTracker
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+MOE_ARCH = "qwen3_moe_30b_a3b"
+DENSE_ARCH = "qwen3_0_6b"
+
+
+def make_engine(arch=MOE_ARCH, seed=0, **eng_kw):
+    cfg = get_config(arch).reduced()
+    kw = dict(max_batch=2, prefill_len=8, max_cache=32)
+    kw.update(eng_kw)
+    return ServingEngine(cfg, EngineConfig(**kw), rng=jax.random.PRNGKey(seed))
+
+
+def submit_all(eng, n_req=3, plen=6, max_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [eng.submit(rng.integers(0, 100, plen), max_new_tokens=max_new)
+            for _ in range(n_req)]
+
+
+def generations(done):
+    return {r.uid: list(r.generated) for r in done}
+
+
+# ---------------------------------------------------------------------------
+# batched prefill == sequential per-request prefill, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", [MOE_ARCH, DENSE_ARCH])
+def test_batched_prefill_matches_sequential(arch):
+    eng_b = make_engine(arch, batched_prefill=True, async_steps=False)
+    eng_s = make_engine(arch, batched_prefill=False, async_steps=False)
+    for eng in (eng_b, eng_s):
+        submit_all(eng, n_req=3)
+    done_b = generations(eng_b.run_until_done())
+    done_s = generations(eng_s.run_until_done())
+    assert done_b == done_s
+    assert all(len(g) == 4 for g in done_b.values())
+
+
+def test_batched_prefill_preserves_inflight_slots():
+    """Admitting into a free slot must not disturb the other slot's cache:
+    interleave arrivals so a prefill lands mid-generation."""
+    eng_b = make_engine(batched_prefill=True, async_steps=False)
+    eng_s = make_engine(batched_prefill=False, async_steps=False)
+    outs = {}
+    for name, eng in (("b", eng_b), ("s", eng_s)):
+        rng = np.random.default_rng(7)
+        p1, p2 = rng.integers(0, 100, 6), rng.integers(0, 100, 5)
+        eng.submit(p1, max_new_tokens=6)
+        eng.step()          # req 1 admitted + 1 decode step
+        eng.step()
+        eng.submit(p2, max_new_tokens=4)   # arrives mid-flight
+        done = eng.run_until_done()
+        outs[name] = generations(done)
+    assert outs["b"] == outs["s"]
+
+
+# ---------------------------------------------------------------------------
+# async stepping: same tokens, same order, same done accounting as sync
+# ---------------------------------------------------------------------------
+
+def test_async_matches_sync_token_for_token():
+    eng_a = make_engine(async_steps=True)
+    eng_s = make_engine(async_steps=False)
+    for eng in (eng_a, eng_s):
+        submit_all(eng, n_req=5, max_new=5)   # 5 requests > 2 slots
+    done_a = eng_a.run_until_done()
+    done_s = eng_s.run_until_done()
+    assert generations(done_a) == generations(done_s)
+    # completion order is also preserved
+    assert [r.uid for r in done_a] == [r.uid for r in done_s]
+
+
+def test_async_done_accounting_varying_budgets():
+    eng = make_engine(async_steps=True)
+    rng = np.random.default_rng(3)
+    uids, budgets = [], {}
+    for i in range(6):
+        n = int(rng.integers(2, 7))
+        uid = eng.submit(rng.integers(0, 100, 5), max_new_tokens=n)
+        uids.append(uid)
+        budgets[uid] = n
+    done = eng.run_until_done()
+    assert sorted(r.uid for r in done) == sorted(uids)
+    for r in done:
+        assert r.done
+        assert len(r.generated) == budgets[r.uid]
+        assert all(0 <= t < eng.cfg.vocab_size for t in r.generated)
+    # nothing left in flight and no unharvested steps
+    assert not eng.queue and all(s is None for s in eng.slots)
+    assert not eng._pending
+
+
+def test_async_defers_harvest_until_completion_boundary():
+    """Mid-generation, async mode holds tokens on device (pending buffer
+    non-empty, request lists empty) until a completion or flush."""
+    eng = make_engine(async_steps=True)
+    eng.submit(np.arange(5), max_new_tokens=8)
+    eng.step()   # admit (prefill pending) + decode 1
+    eng.step()
+    req = eng._all[1]
+    assert eng._pending, "async mode should buffer device steps"
+    assert req.generated == []
+    eng.flush()
+    assert not eng._pending
+    assert len(req.generated) == 3          # prefill token + 2 decode steps
+
+
+# ---------------------------------------------------------------------------
+# device-side routing capture
+# ---------------------------------------------------------------------------
+
+def test_device_routing_matches_reference_recompute():
+    """Engine tracker stats == an independent replay through the routed
+    model API with an identically-grouped fresh tracker."""
+    eng = make_engine(max_batch=1, async_steps=False)
+    prompt = np.arange(6) % 100
+    eng.submit(prompt, max_new_tokens=5)
+    done = eng.run_until_done()
+    assert len(done) == 1
+
+    cfg = eng.cfg
+    model = build_model(cfg)
+    ref = LRUExpertTracker(cfg.num_layers, cfg.num_experts)
+    cache = model.init_cache(1, eng.ecfg.max_cache)
+    pad = np.zeros((eng.ecfg.prefill_len,), np.int32)
+    pad[:len(prompt)] = prompt
+    logits, cache, routing = model.prefill_routed(
+        eng.params, {"tokens": jnp.asarray(pad[None])}, cache)
+    routing = np.asarray(routing)
+    for layer in range(cfg.num_layers):
+        ref.observe(layer, routing[layer])
+    ref.tick()
+    toks = [int(jnp.argmax(logits[0, -1, :cfg.vocab_size]))]
+    lengths = np.array([eng.ecfg.prefill_len], np.int32)
+    for _ in range(4):
+        logits, cache, routing = model.decode_step_routed(
+            eng.params, cache,
+            {"tokens": jnp.asarray([[toks[-1]]]),
+             "lengths": jnp.asarray(lengths)})
+        routing = np.asarray(routing)
+        for layer in range(cfg.num_layers):
+            ref.observe(layer, routing[layer])
+        ref.tick()
+        toks.append(int(jnp.argmax(logits[0, -1, :cfg.vocab_size])))
+        lengths += 1
+
+    assert done[0].generated == toks
+    np.testing.assert_array_equal(eng.tracker.exec_counts, ref.exec_counts)
+    np.testing.assert_array_equal(eng.tracker.last_used, ref.last_used)
+    e2 = eng.expected_experts_per_node(2)
+    assert e2 == ref.mean_executed_per_node(2)
+    assert 0.0 < e2 <= cfg.num_experts / 2 + 1e-9
+
+
+def test_decode_loop_does_zero_host_router_evaluations(monkeypatch):
+    """After warmup (jit traces compiled), the steady-state hot loop must
+    never call the router on the host — routing stats come exclusively from
+    the device aux outputs."""
+    eng = make_engine(async_steps=True)
+    submit_all(eng, n_req=1, max_new=3)
+    eng.run_until_done()   # compiles prefill + decode traces
+
+    def boom(*a, **k):
+        raise AssertionError("host-side router evaluation in the hot loop")
+    monkeypatch.setattr(router_lib, "route", boom)
+    uids = submit_all(eng, n_req=2, max_new=4, seed=11)
+    done = eng.run_until_done()
+    assert set(uids) <= {r.uid for r in done}
+    assert eng.expected_experts_per_node(2) > 0.0
+
+
+def test_prefill_routing_shape_and_range():
+    cfg = get_config(MOE_ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 8
+    cache = model.init_cache(b, 16)
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 100, (b, s)))
+    _, _, routing = model.prefill_routed(params, {"tokens": toks}, cache)
+    assert routing.shape == (cfg.num_layers, b * s, cfg.experts_per_token)
+    r = np.asarray(routing)
+    assert r.min() >= 0 and r.max() < cfg.num_experts
+    _, _, dec = model.decode_step_routed(
+        params, cache, {"tokens": toks[:, :1],
+                        "lengths": jnp.full((b,), s, jnp.int32)})
+    assert dec.shape == (cfg.num_layers, b, cfg.experts_per_token)
+
+
+def test_dense_arch_routing_is_none():
+    cfg = get_config(DENSE_ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(1, 16)
+    _, _, routing = model.prefill_routed(
+        params, {"tokens": jnp.zeros((1, 8), jnp.int32)}, cache)
+    assert routing is None
