@@ -3,6 +3,31 @@ paper's §5.2 breakdown (prompt evaluation vs token generation) and the
 Table 1 routing statistic.
 
     PYTHONPATH=src python examples/serve_moe.py
+
+Serving knobs (docs/DESIGN.md §3, §5)
+-------------------------------------
+The engine defaults to the zero-copy production configuration:
+
+* ``EngineConfig.donate_buffers`` (default True) — every hot-loop jit
+  donates its cache, and the model updates it in place on a scan carry, so
+  the steady-state decode step never copies the KV cache (the paper's C1
+  pre-allocated buffers, HLO-verified in tests/test_zero_copy.py).  Set
+  False to A/B the copy-per-step baseline.
+* ``ModelConfig.gather_decode_max_tk`` (default 64) — small decode batches
+  (T·K at or below the threshold) skip the fixed-capacity dispatch and its
+  8-slots-per-expert padding floor whenever a capacity-free form is
+  cheaper: a per-token expert-weight gather when T·K <= E_local, or a
+  one-hot dense compute when T is below the capacity floor; otherwise the
+  normal dispatch (with its capacity semantics) still runs.  0 disables.
+* ``ModelConfig.expert_parallel="a2a_pipelined"`` +
+  ``ModelConfig.ep_microchunks=m`` — on a multi-node mesh, split each
+  shard's token block into m chunks and overlap chunk i's expert FFN with
+  chunk i+1's all_to_all dispatch (token-exact vs plain ``a2a``;
+  single-token decode falls back to ``decentralized``).
+
+Compare engine modes end-to-end with
+``python -m benchmarks.serving_engine`` (writes repo-root
+BENCH_serving.json).
 """
 from repro.configs.base import get_config
 from repro.launch.serve import serve_demo

@@ -61,13 +61,35 @@ class ModelConfig:
     norm: str = "rmsnorm"
     positional: str = "rope"         # rope | sinusoidal | none
     tie_embeddings: bool = False
-    # runtime / paper-method knobs (DESIGN.md §5)
+    # runtime / paper-method knobs (docs/DESIGN.md §5)
     dtype: str = "bfloat16"
     param_dtype: str = "bfloat16"
     moe_strategy: str = "dispatch"          # dense (=L_B) | dispatch (=L_R)
-    expert_parallel: str = "decentralized"  # centralized | decentralized | a2a
+    # expert-parallel collective schedule (docs/DESIGN.md §5):
+    #   centralized | decentralized | a2a | a2a_pipelined
+    # a2a_pipelined splits the local token block into ``ep_microchunks``
+    # chunks and software-pipelines them so chunk i's expert FFN overlaps
+    # chunk i+1's all_to_all dispatch (double-buffered scan); token-exact
+    # vs a2a whenever capacity is not binding, and falls back to a2a /
+    # decentralized exactly where a2a would.
+    expert_parallel: str = "decentralized"
     expert_replication: int = 1             # paper §5.3 overlapping placement
     capacity_factor: float = 1.25
+    # number of microchunks for the a2a_pipelined schedule (1 = no
+    # pipelining; values that do not divide the local token count fall back
+    # to plain a2a)
+    ep_microchunks: int = 1
+    # capacity-free decode fast path: when a dispatch-strategy MoE layer
+    # sees T*K routing decisions at or below this threshold (small decode
+    # batches), it skips the fixed-capacity dispatch — whose round_capacity
+    # floor of 8 slots/expert makes tiny batches compute mostly padding —
+    # whenever a capacity-free form is cheaper: a reference_moe-style
+    # per-token gather (core/moe.gather_moe; reads only the selected
+    # experts' weights) when T*K <= E_local, or the one-hot dense compute
+    # when T is below the capacity floor.  Those forms never drop tokens;
+    # outside both cut-offs the normal dispatch (capacity semantics,
+    # possible drops) still runs.  0 disables the fast path.
+    gather_decode_max_tk: int = 64
     prestack: bool = True                   # C2: stacked layer/expert layout
     use_kernel: bool = False                # Pallas grouped-GEMM path
     use_flash_kernel: bool = False          # Pallas flash-attention path

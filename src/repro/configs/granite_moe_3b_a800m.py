@@ -2,7 +2,7 @@
 
 32L d_model=1536 24H (GQA kv=8) per-expert d_ff=512 vocab=49155,
 40 experts top-8.  40 % 16 != 0 -> experts padded to 48 with router-dead
-entries (DESIGN.md §4); vocab padded 49155 -> 49408 for sharding.
+entries (docs/DESIGN.md §4); vocab padded 49155 -> 49408 for sharding.
 """
 from repro.configs.base import ModelConfig
 

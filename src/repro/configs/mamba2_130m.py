@@ -1,7 +1,7 @@
 """Mamba2-130M SSD [arXiv:2405.21060].
 
 24L d_model=768 attention-free, ssm_state=128, headdim=64, expand=2,
-vocab=50280.  Expert parallelism inapplicable (DESIGN.md §4); runs under
+vocab=50280.  Expert parallelism inapplicable (docs/DESIGN.md §4); runs under
 data(+pod) parallelism; long_500k native via O(1) recurrent state.
 """
 from repro.configs.base import ModelConfig

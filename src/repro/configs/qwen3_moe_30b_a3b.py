@@ -2,7 +2,7 @@
 
 48L d_model=2048 32H (GQA kv=4, head_dim=128) per-expert d_ff=768,
 vocab=151936, 128 experts top-8.  Primary target of the paper's
-expert-parallel technique (DESIGN.md §4).
+expert-parallel technique (docs/DESIGN.md §4).
 """
 from repro.configs.base import ModelConfig
 

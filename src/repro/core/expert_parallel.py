@@ -1,6 +1,6 @@
 """Expert-parallel execution of one MoE layer across the mesh.
 
-Three collective schedules (DESIGN.md §5):
+Four collective schedules (docs/DESIGN.md §5):
 
 * ``centralized``   — the paper's naive organization (Fig. 3): expert inputs
   flow through a center, 2 communications per layer.  SPMD realization:
@@ -13,11 +13,22 @@ Three collective schedules (DESIGN.md §5):
 * ``a2a``           — beyond-paper schedule: tokens stay sequence-sharded,
   dispatch/combine use all_to_all so only top-k activations move, not the
   full token stream.  (What modern MoE stacks do; see EXPERIMENTS.md §Perf.)
+* ``a2a_pipelined`` — a2a with comm/compute overlap: the local token block
+  is split into ``cfg.ep_microchunks`` chunks and software-pipelined with a
+  double-buffered scan — chunk i's expert FFN is independent of chunk i+1's
+  dispatch all_to_all, so a latency-hiding scheduler can overlap them.
+  Addresses the paper's central measurement that expert computation time ≈
+  expert communication time (§5.2): pipelining hides the shorter of the
+  two behind the longer (modelled analytically by
+  core/perf_model.estimate(..., microchunks=m)).  Token-exact vs ``a2a``
+  whenever capacity is not binding; per-chunk capacity is
+  round_capacity(T_loc/m).
 
 When the token count cannot be split over the expert axis (single-token
 decode), ``centralized`` degrades to psum + a value-preserving ring
 ``ppermute`` so the *second* communication of the centralized design is
-still present in the lowered HLO (cost-faithful; values unchanged).
+still present in the lowered HLO (cost-faithful; values unchanged), and
+both a2a schedules fall back to ``decentralized``.
 """
 from __future__ import annotations
 
@@ -47,6 +58,25 @@ def _local_moe(cfg, experts: dict, x2d: Array, rout: router_lib.RouterOut,
     if cfg.moe_strategy == "dense":
         return moe_lib.dense_moe(experts, x2d, rout.top_idx, rout.top_w,
                                  e_start, cfg.use_kernel)
+    t, k = rout.top_idx.shape
+    e_local = experts["w_gate"].shape[0]
+    if 0 < t * k <= getattr(cfg, "gather_decode_max_tk", 0):
+        # capacity-free decode fast path (no round_capacity floor, no
+        # dispatch plan, no drops), form chosen by modeled cost:
+        #  * per-token gather when T*K <= E_local — reads only the selected
+        #    experts' weights (< one full local shard);
+        #  * one-hot dense compute when T is below the capacity floor —
+        #    same weight traffic as dispatch but E_local*T FFN rows instead
+        #    of E_local*C mostly-padding slots, and none of the
+        #    argsort/scatter plan overhead.
+        # Above both cut-offs the fixed-capacity dispatch is already the
+        # cheaper layout and wins.
+        if t * k <= e_local:
+            return moe_lib.gather_moe(experts, x2d, rout.top_idx, rout.top_w,
+                                      e_start)
+        if t < capacity:
+            return moe_lib.dense_moe(experts, x2d, rout.top_idx, rout.top_w,
+                                     e_start, cfg.use_kernel)
     return moe_lib.dispatch_moe(experts, x2d, rout.top_idx, rout.top_w,
                                 cfg.num_experts_padded, e_start, capacity,
                                 cfg.use_kernel)
@@ -122,7 +152,7 @@ def moe_layer(cfg, mesh, layer_p: dict, x: Array, token_mask: Array | None = Non
     if token_mask is None:
         token_mask = jnp.ones((b, s), jnp.bool_)
     fn = {"decentralized": _decentralized, "centralized": _centralized,
-          "a2a": _a2a}[cfg.expert_parallel]
+          "a2a": _a2a, "a2a_pipelined": _a2a_pipelined}[cfg.expert_parallel]
     y, aux, top_idx = fn(cfg, mesh, layer_p, x, token_mask, batch_axes,
                          n_exp_shards, e_local)
     return y, aux, top_idx.reshape(b * s, k)
@@ -288,6 +318,42 @@ def _centralized(cfg, mesh, layer_p, x, token_mask, batch_axes, n_shards,
 # a2a (beyond paper): sequence-sharded tokens + all_to_all dispatch/combine
 # ---------------------------------------------------------------------------
 
+def _a2a_dispatch(cfg, xi, ti, n_shards, e_local, cap):
+    """Token-block dispatch: capacity plan + gather + all_to_all (comm 1).
+
+    Shared by ``_a2a`` (whole local block) and ``_a2a_pipelined`` (one
+    microchunk) — the plan builds buffers for *all* experts, grouped by
+    owner shard, so shard i's slice j travels to shard j.  Returns the
+    post-exchange (n_src_shards, e_local*cap, d) buffer of local-expert
+    inputs plus ``slot_of`` for the combine."""
+    dd = xi.shape[-1]
+    dispatch_tok, slot_valid, slot_of = moe_lib.make_dispatch_plan(
+        ti, cfg.num_experts_padded, 0, cfg.num_experts_padded, cap)
+    xe = xi[dispatch_tok] * slot_valid[:, None].astype(xi.dtype)
+    xe = xe.reshape(n_shards, e_local * cap, dd)
+    xe = jax.lax.all_to_all(xe, EXPERT_AXIS, split_axis=0, concat_axis=0,
+                            tiled=False)
+    return xe, slot_of
+
+
+def _a2a_ffn_combine(cfg, experts, xe, slot_of, wi, n_shards, e_local, cap):
+    """Token-block compute: expert FFN + return all_to_all (comm 2) +
+    weighted combine back into source-token order (shared by ``_a2a`` and
+    ``_a2a_pipelined``)."""
+    dd = xe.shape[-1]
+    xe = xe.transpose(1, 0, 2).reshape(e_local, n_shards * cap, dd)
+    ye = moe_lib.expert_ffn(experts, xe, cfg.use_kernel)
+    # invert (e_local, cap*n_src) -> (n_src, e_local*cap) exactly
+    ye = ye.reshape(e_local, cap, n_shards, dd).transpose(2, 0, 1, 3)
+    ye = ye.reshape(n_shards, e_local * cap, dd)
+    ye = jax.lax.all_to_all(ye, EXPERT_AXIS, split_axis=0, concat_axis=0,
+                            tiled=False)
+    ye = ye.reshape(n_shards * e_local * cap, dd)
+    ye_pad = jnp.concatenate([ye, jnp.zeros((1, dd), ye.dtype)], axis=0)
+    y_tk = ye_pad[slot_of]
+    return jnp.einsum("tk,tkd->td", wi.astype(y_tk.dtype), y_tk)
+
+
 def _a2a(cfg, mesh, layer_p, x, token_mask, batch_axes, n_shards, e_local):
     b, s, d = x.shape
     if s % n_shards != 0:
@@ -307,31 +373,101 @@ def _a2a(cfg, mesh, layer_p, x, token_mask, batch_axes, n_shards, e_local):
                                 n_valid_experts=cfg.num_experts)
         rout = _mask_rout(rout, tm_loc.reshape(bl * sl),
                           cfg.num_experts_padded)
-        # build dispatch buffers for *all* experts, grouped by owner shard
-        dispatch_tok, slot_valid, slot_of = moe_lib.make_dispatch_plan(
-            rout.top_idx, cfg.num_experts_padded, 0,
-            cfg.num_experts_padded, cap)
-        xe = x2d[dispatch_tok] * slot_valid[:, None].astype(x2d.dtype)
-        xe = xe.reshape(n_shards, e_local * cap, dd)
-        # comm 1: all_to_all — shard i sends slice j to shard j
-        xe = jax.lax.all_to_all(xe, EXPERT_AXIS, split_axis=0, concat_axis=0,
-                                tiled=False)
-        # now: (n_src_shards, e_local * cap, d) of *local* experts
-        xe = xe.transpose(1, 0, 2).reshape(e_local, n_shards * cap, dd)
-        ye = moe_lib.expert_ffn(experts, xe, cfg.use_kernel)
-        # invert (e_local, cap*n_src) -> (n_src, e_local*cap) exactly
-        ye = ye.reshape(e_local, cap, n_shards, dd).transpose(2, 0, 1, 3)
-        ye = ye.reshape(n_shards, e_local * cap, dd)
-        # comm 2: all_to_all back to source shards
-        ye = jax.lax.all_to_all(ye, EXPERT_AXIS, split_axis=0, concat_axis=0,
-                                tiled=False)
-        ye = ye.reshape(n_shards * e_local * cap, dd)
-        ye_pad = jnp.concatenate([ye, jnp.zeros((1, dd), ye.dtype)], axis=0)
-        y_tk = ye_pad[slot_of]
-        y = jnp.einsum("tk,tkd->td", rout.top_w.astype(y_tk.dtype), y_tk)
+        xe, slot_of = _a2a_dispatch(cfg, x2d, rout.top_idx, n_shards,
+                                    e_local, cap)
+        y = _a2a_ffn_combine(cfg, experts, xe, slot_of, rout.top_w,
+                             n_shards, e_local, cap)
         aux = jax.lax.pmean(rout.aux_loss, (EXPERT_AXIS,) + tuple(batch_axes))
         return (y.reshape(bl, sl, dd), aux,
                 rout.top_idx.reshape(bl, sl, cfg.experts_per_token))
+
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), _expert_specs(EXPERT_AXIS),
+                  P(batch_axes, EXPERT_AXIS, None),
+                  P(batch_axes, EXPERT_AXIS)),
+        out_specs=(P(batch_axes, EXPERT_AXIS, None), P(),
+                   P(batch_axes, EXPERT_AXIS, None)),
+        check_vma=True,
+    )(layer_p["router"], layer_p["experts"], x, token_mask)
+
+
+# ---------------------------------------------------------------------------
+# a2a_pipelined: microchunked a2a with comm/compute overlap
+# ---------------------------------------------------------------------------
+
+def _a2a_pipelined(cfg, mesh, layer_p, x, token_mask, batch_axes, n_shards,
+                   e_local):
+    """Software-pipelined a2a: the local token block is split into
+    ``cfg.ep_microchunks`` chunks, and a double-buffered ``lax.scan`` keeps
+    one chunk's dispatched activations in flight while the previous chunk's
+    expert FFN runs — within each scan step, ``dispatch(chunk i+1)`` (the
+    all_to_all) has no data dependency on ``ffn_combine(chunk i)`` (the
+    expert GEMMs), which is exactly the structure XLA's latency-hiding
+    scheduler needs to overlap collective DMA with compute.  The paper
+    measures expert comm ≈ expert compute (§5.2); this schedule bounds the
+    layer at max(comm, compute) + min(comm, compute)/m instead of their sum
+    (see core/perf_model.estimate(..., microchunks=m)).
+
+    Per-chunk capacity is ``round_capacity(T_loc/m)``, so routing and
+    per-slot contractions are identical to ``a2a`` whenever capacity is not
+    binding — token-exact end-to-end (outputs differ only by XLA's
+    reduction-order reassociation at the chunked GEMM shapes, <1e-6, which
+    never flips a greedy token; both properties are asserted in
+    tests/distributed_checks.py).  Falls back to ``_a2a`` when the chunk
+    split does not divide, which itself falls back to ``_decentralized``
+    for single-token decode."""
+    b, s, d = x.shape
+    if s % n_shards != 0:
+        # single-token decode: same fallback as _a2a
+        return _decentralized(cfg, mesh, layer_p, x, token_mask, batch_axes,
+                              n_shards, e_local)
+    m = max(getattr(cfg, "ep_microchunks", 1), 1)
+    t_loc = (b // max(_axes_size(mesh, batch_axes), 1)) * (s // n_shards)
+    if m <= 1 or t_loc % m != 0 or t_loc // m < 1:
+        return _a2a(cfg, mesh, layer_p, x, token_mask, batch_axes, n_shards,
+                    e_local)
+    k = cfg.experts_per_token
+    e_pad = cfg.num_experts_padded
+    # per-(source shard, chunk, expert) capacity
+    cap = moe_lib.round_capacity(t_loc // m, k, e_pad, cfg.capacity_factor)
+
+    def body(router_w, experts, x_loc, tm_loc):
+        bl, sl, dd = x_loc.shape
+        t = bl * sl
+        x2d = x_loc.reshape(t, dd)
+        rout = router_lib.route(router_w, x2d, k,
+                                norm_topk=cfg.router_norm_topk,
+                                n_valid_experts=cfg.num_experts)
+        rout = _mask_rout(rout, tm_loc.reshape(t), e_pad)
+        tc = t // m
+        xc = x2d.reshape(m, tc, dd)
+        ic = rout.top_idx.reshape(m, tc, k)
+        wc = rout.top_w.reshape(m, tc, k)
+        dispatch = lambda xi, ti: _a2a_dispatch(cfg, xi, ti, n_shards,
+                                                e_local, cap)
+        ffn_combine = lambda xe, so, wi: _a2a_ffn_combine(
+            cfg, experts, xe, so, wi, n_shards, e_local, cap)
+
+        # double-buffered pipeline: the carry holds chunk i's in-flight
+        # dispatched buffer; each step issues chunk i+1's dispatch BEFORE
+        # consuming chunk i, so the two can overlap
+        xe0, so0 = dispatch(xc[0], ic[0])
+
+        def step(carry, nxt):
+            xe_i, so_i, w_i = carry
+            x_n, i_n, w_n = nxt
+            xe_next, so_next = dispatch(x_n, i_n)      # comm for chunk i+1
+            y_i = ffn_combine(xe_i, so_i, w_i)         # compute for chunk i
+            return (xe_next, so_next, w_n), y_i
+
+        (xe_l, so_l, w_l), ys = jax.lax.scan(
+            step, (xe0, so0, wc[0]), (xc[1:], ic[1:], wc[1:]))
+        y_last = ffn_combine(xe_l, so_l, w_l)          # drain the pipeline
+        y = jnp.concatenate([ys.reshape((m - 1) * tc, dd), y_last], axis=0)
+        aux = jax.lax.pmean(rout.aux_loss, (EXPERT_AXIS,) + tuple(batch_axes))
+        return (y.reshape(bl, sl, dd), aux,
+                rout.top_idx.reshape(bl, sl, k))
 
     return compat.shard_map(
         body, mesh=mesh,

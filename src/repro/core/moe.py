@@ -1,5 +1,5 @@
 """MoE expert execution strategies — the paper's load-balancing methods as
-static-shape TPU computations (DESIGN.md §2, §5).
+static-shape TPU computations (docs/DESIGN.md §2, §5).
 
 * ``dense``    — Busy Full Loading (L_B, paper §4.2): every expert computes
                  every token; unselected contributions are zeroed in the
@@ -122,6 +122,43 @@ def dispatch_moe(experts: dict, x: Array, top_idx: Array, top_w: Array,
     ye_pad = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
     y_tk = ye_pad[slot_of]                                  # (T, K, D)
     return jnp.einsum("tk,tkd->td", top_w.astype(y_tk.dtype), y_tk)
+
+
+# ---------------------------------------------------------------------------
+# strategy: gather  (capacity-free decode fast path)
+# ---------------------------------------------------------------------------
+
+def gather_moe(experts: dict, x: Array, top_idx: Array, top_w: Array,
+               e_start: int) -> Array:
+    """Capacity-free per-token expert gather on the local shard.
+
+    The dispatch path pays ``round_capacity``'s floor of 8 slots per expert
+    no matter how few tokens arrive — a single-token decode step against E
+    experts runs E·8 FFN rows of which at most K are real.  For small T·K
+    (``cfg.gather_decode_max_tk``) this path instead gathers each token's
+    selected expert weights directly (reference_moe's form, sharded): T·K
+    FFN rows, zero padding, zero drops, and only the selected experts'
+    weights are read — the decode analogue of the paper's observation that
+    per-token expert *loads* dominate small-batch inference.
+
+    x: (T, D).  Non-local selections (including ``_mask_rout``'s E_pad
+    dead-route sentinel) contribute zero via a masked combine weight.
+    Returns the local partial sum (T, D); caller psums across shards.
+    ``use_kernel`` does not apply: the Pallas grouped GEMM wants the
+    (E_local, C, D) capacity layout this path exists to avoid."""
+    e_local = experts["w_gate"].shape[0]
+    local = (top_idx >= e_start) & (top_idx < e_start + e_local)
+    idx = jnp.clip(top_idx - e_start, 0, e_local - 1)
+    w = jnp.where(local, top_w, 0.0)
+    g = jnp.einsum("td,tkdf->tkf", x, experts["w_gate"][idx],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("td,tkdf->tkf", x, experts["w_up"][idx],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    y = jnp.einsum("tkf,tkfd->tkd", h, experts["w_down"][idx],
+                   preferred_element_type=jnp.float32)
+    return jnp.einsum("tk,tkd->td", w.astype(jnp.float32),
+                      y.astype(jnp.float32)).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

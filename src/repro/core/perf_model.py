@@ -7,7 +7,11 @@ Per-token lower-bound inference time for an expert-parallel MoE system:
 
 The module reproduces Table 1 (DBRX variable derivations), Table 6
 (estimated bounds for 2–8 Mac Studio nodes over 10 GbE), Fig. 8's RDMA NIC
-projections, and Table 5's cost-efficiency comparison.  The same equation
+projections, and Table 5's cost-efficiency comparison.  Beyond the paper,
+``estimate(..., microchunks=m)`` extends Eq. (1) with a comm/compute
+overlap term modelling the ``a2a_pipelined`` schedule
+(core/expert_parallel): serial gpu+comm becomes the pipelined bound
+m·latency + max(gpu, transfer) + min(gpu, transfer)/m.  The same equation
 parameterized with TPU v5e constants is the seed of the roofline analysis
 in benchmarks/roofline.py (compute/memory terms from the compiled HLO
 replace the napkin FLOPs/bytes; the comm term becomes the collective term).
@@ -114,6 +118,16 @@ class Estimate:
     compute_time: float
     latency_time: float
     transfer_time: float
+    # comm/compute overlap term: >1 models the a2a_pipelined schedule
+    # (core/expert_parallel), which splits the token block into m
+    # microchunks and overlaps chunk i's expert FFN with chunk i+1's
+    # dispatch.  Eq. (1)'s serial sum gpu + comm then becomes the two-stage
+    # pipeline bound  m·latency + max(gpu, transfer) + min(gpu, transfer)/m:
+    # the slower stage is exposed in full, the faster one only through its
+    # un-overlapped first chunk, and every microchunk round pays the
+    # per-layer collective latency.  m = 1 reproduces the paper's serial
+    # Eq. (1) exactly (Tables 5/6).
+    microchunks: int = 1
 
     @property
     def gpu_time(self) -> float:
@@ -125,7 +139,11 @@ class Estimate:
 
     @property
     def total(self) -> float:
-        return self.gpu_time + self.comm_time
+        m = self.microchunks
+        if m <= 1:
+            return self.gpu_time + self.comm_time
+        g, t = self.gpu_time, self.transfer_time
+        return self.latency_time * m + max(g, t) + min(g, t) / m
 
     @property
     def throughput(self) -> float:
@@ -133,8 +151,13 @@ class Estimate:
 
 
 def estimate(w: MoEWorkload, hw: HardwareProfile, n_nodes: int,
-             expected_experts: float | None = None) -> Estimate:
-    """Paper Eq. (1): per-token generation lower bound on n_nodes."""
+             expected_experts: float | None = None,
+             microchunks: int = 1) -> Estimate:
+    """Paper Eq. (1): per-token generation lower bound on n_nodes.
+
+    ``microchunks`` > 1 applies the a2a_pipelined overlap term (see
+    ``Estimate.microchunks``); the default reproduces the paper's serial
+    bound."""
     if expected_experts is None:
         expected_experts = PAPER_EXPECTED_EXPERTS.get(
             n_nodes, expected_experts_per_node(16, 4, n_nodes))
@@ -145,24 +168,36 @@ def estimate(w: MoEWorkload, hw: HardwareProfile, n_nodes: int,
         compute_time=flops / hw.peak_flops,
         latency_time=hw.comm_latency * w.n_layers,
         transfer_time=w.comm_bytes / hw.comm_bw,
+        microchunks=microchunks,
     )
 
 
 def scaling_table(w: MoEWorkload = DBRX_TABLE1,
                   hw: HardwareProfile = M2_ULTRA_10GBE,
-                  nodes: tuple = (2, 3, 4, 6, 8)) -> list[dict]:
-    """Reproduces paper Table 6 (and the green triangles of Fig. 8)."""
+                  nodes: tuple = (2, 3, 4, 6, 8),
+                  microchunks: int = 1) -> list[dict]:
+    """Reproduces paper Table 6 (and the green triangles of Fig. 8).
+
+    ``microchunks`` > 1 adds the a2a_pipelined overlap columns
+    (``bound_s_pipelined`` / ``tokens_per_sec_pipelined``) next to the
+    paper's serial bound, so Table 5/6-style estimates can model the
+    overlapped schedule."""
     rows = []
     for n in nodes:
         e = estimate(w, hw, n)
-        rows.append({
+        row = {
             "nodes": n, "load_s": e.load_time, "comp_s": e.compute_time,
             "lat_s": e.latency_time, "trans_s": e.transfer_time,
             "bound_s": e.total, "tokens_per_sec": e.throughput,
             # Table 6 prints Time rounded to 3 decimals and derives TP from
             # the rounded value (e.g. 3 nodes: 1/0.096 = 10.4)
             "tokens_per_sec_table6": 1.0 / round(e.total, 3),
-        })
+        }
+        if microchunks > 1:
+            ep = dataclasses.replace(e, microchunks=microchunks)
+            row["bound_s_pipelined"] = ep.total
+            row["tokens_per_sec_pipelined"] = ep.throughput
+        rows.append(row)
     return rows
 
 

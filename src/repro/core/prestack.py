@@ -35,7 +35,7 @@ def stack_experts(expert_list: list) -> dict:
 
 def pad_experts(experts: dict, num_padded: int) -> dict:
     """Pad the expert axis with zero (router-dead) experts — granite's
-    40 -> 48 padding (DESIGN.md §4)."""
+    40 -> 48 padding (docs/DESIGN.md §4)."""
     e = jax.tree.leaves(experts)[0].shape[0]
     if e == num_padded:
         return experts

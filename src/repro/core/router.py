@@ -4,7 +4,7 @@ Dead-expert masking is how the framework handles expert counts that do not
 divide the expert-parallel axis (e.g. granite's 40 experts padded to 48):
 padded experts get -inf router logits so they are never selected, while the
 parameter layout stays uniformly shardable — a static realization of the
-paper's load-balancing theme (DESIGN.md §4).
+paper's load-balancing theme (docs/DESIGN.md §4).
 """
 from __future__ import annotations
 

@@ -337,6 +337,38 @@ def breakdown(hlo_text: str, top: int = 20) -> list[tuple[str, float, float]]:
     return [(k, v, 0.0) for k, v in ranked]
 
 
+def sized_copies(hlo_text: str, min_bytes: int) -> list[tuple[str, int]]:
+    """Every ``copy`` instruction whose result is >= ``min_bytes``, as
+    (stripped instruction line, result bytes).
+
+    The zero-copy serving regression (tests/test_zero_copy.py) uses this on
+    the compiled decode step: with the cache donated and updated via
+    dynamic_update_slice on a scan carry, the program must contain no copy
+    the size of a full cache leaf — XLA's way of materializing either a
+    non-aliased input (the paper's C1 memory-management overhead) or a
+    gqa_repeat of the cache."""
+    out = []
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = re.search(r"=\s*(" + "|".join(_DTYPE_BYTES) +
+                      r")\[([0-9,]*)\]\S*\s+copy\(", line)
+        if not m:
+            continue
+        nb = shape_bytes(m.group(1), m.group(2))
+        if nb >= min_bytes:
+            out.append((line, nb))
+    return out
+
+
+def input_output_aliases(hlo_text: str) -> int:
+    """Number of donated-parameter aliases in the module header (0 when the
+    jit was compiled without ``donate_argnums`` or donation was unusable)."""
+    m = re.search(r"input_output_alias=\{(.*?)\}\s*,\s*entry", hlo_text)
+    if not m:
+        return 0
+    return len(re.findall(r"(?:may|must)-alias", m.group(1)))
+
+
 def analyze(hlo_text: str) -> Totals:
     comps = parse(hlo_text)
     entry = comps["__entry__"]

@@ -10,9 +10,9 @@ Two parameter modes:
     batch axes (fast per-step access, no per-layer gathers).
 
 Expert weights always carry the expert axis on "model" — the paper's expert
-parallelism (DESIGN.md §5) — matching core/expert_parallel's shard_map
+parallelism (docs/DESIGN.md §5) — matching core/expert_parallel's shard_map
 in_specs.  Divisibility fallbacks (replicate when a dim does not divide the
-axis) are the granite-40-experts / qwen2-vl-28-heads cases from DESIGN.md §4.
+axis) are the granite-40-experts / qwen2-vl-28-heads cases from docs/DESIGN.md §4.
 """
 from __future__ import annotations
 

@@ -291,6 +291,34 @@ def _update_cache(cache_kv: Array, new_kv: Array, lengths: Array, ring: bool) ->
     return jax.vmap(upd)(cache_kv, new_kv, slot)
 
 
+def _attend_grouped_decode(cfg, q: Array, k_cache: Array, v_cache: Array,
+                           mask: Array) -> Array:
+    """Single-step GQA attention over the cache WITHOUT materializing
+    ``gqa_repeat``: repeating Hkv cache heads to Hq reads (and, in the
+    lowered HLO, copies) the entire KV cache G=Hq/Hkv times per layer per
+    step — it was the residual full-cache-sized copy in the decode program
+    after buffer donation.  Indexing kv heads per q-head group keeps the
+    cache read exactly once (same trick as the CP-decode shard body and any
+    TPU flash decode kernel).
+
+    q: (B,1,Hq,hd); k_cache/v_cache: (B,S,Hkv,hd); mask: (B,S) bool.
+    Returns (B,1,Hq,hd)."""
+    hkv = k_cache.shape[2]
+    g = cfg.num_heads // hkv
+    scale = cfg.head_dim ** -0.5
+    qg = q.reshape(q.shape[0], 1, hkv, g, q.shape[-1])       # (B,1,Hkv,G,hd)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    mask5 = mask[:, None, None, None, :]                     # (B,1,1,1,S)
+    logits = jnp.where(mask5, logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bhgqd", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    b, _, _, _, hd = out.shape
+    out = out.astype(q.dtype).transpose(0, 3, 1, 2, 4)       # (B,1,Hkv,G,hd)
+    return out.reshape(b, 1, hkv * g, hd)
+
+
 def attn_decode_step(p: dict, cfg, cache: dict, x: Array, lengths: Array,
                      window: int | None,
                      mrope_positions: Array | None = None,
@@ -317,8 +345,6 @@ def attn_decode_step(p: dict, cfg, cache: dict, x: Array, lengths: Array,
         v_cache = _update_cache(cache["v"], v_new, lengths, ring)
         new_cache = {"k": k_cache, "v": v_cache}
 
-    k = gqa_repeat(k_cache, cfg.num_heads)
-    v = gqa_repeat(v_cache, cfg.num_heads)
     idx = jnp.arange(cache_len)[None, :]  # (1, S)
     if ring:
         # slot i holds absolute position: valid iff that position is within
@@ -330,8 +356,7 @@ def attn_decode_step(p: dict, cfg, cache: dict, x: Array, lengths: Array,
         mask = idx <= lengths[:, None]
         if window is not None:
             mask = mask & (idx > lengths[:, None] - window)
-    mask = mask[:, None, None, :]  # (B,1,1,Sk)
-    out = attend(q, k, v, mask, cfg.head_dim ** -0.5)
+    out = _attend_grouped_decode(cfg, q, k_cache, v_cache, mask)
     out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
     out = jnp.einsum("bse,ed->bsd", out, p["wo"])
     return out, new_cache

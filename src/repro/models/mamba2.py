@@ -4,7 +4,7 @@ Chunked SSD for train/prefill (quadratic intra-chunk dual form + sequential
 inter-chunk state recurrence via ``lax.scan``), O(1)-state recurrent update
 for decode.  This is the attention-free family assigned to the framework —
 the paper's expert-parallel technique is inapplicable here (documented in
-DESIGN.md §Arch-applicability); the block runs under data parallelism.
+docs/DESIGN.md §Arch-applicability); the block runs under data parallelism.
 
 Shapes follow the reference: x is split into H heads of P=headdim channels;
 state is (H, P, N) with N = d_state; B/C are shared across heads (n_groups=1).

@@ -22,6 +22,15 @@ Both routed entry points honour an optional ``batch["token_mask"]``
 consume no expert capacity (how the serving engine's batched prefill keeps
 garbage/in-flight rows from perturbing real requests); their ``routing``
 entries read E_pad.
+
+Donation safety: ``prefill_routed`` / ``decode_step_routed`` update the
+cache exclusively via ``dynamic_update_slice`` on a scan carry
+(transformer._scan_stack_with_cache) — a caller that jits with the cache
+in ``donate_argnums`` gets in-place aliasing and a zero-copy decode step
+(tests/test_zero_copy.py).  ``lengths`` is a separate, never-donated
+operand, preserving the engine's host-snapshot race fix (the host may
+mutate its own lengths array after dispatch; the device sees the
+snapshot).
 """
 from __future__ import annotations
 

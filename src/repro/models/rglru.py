@@ -12,7 +12,7 @@ per-channel (diagonal) gated linear recurrence:
 Train/prefill uses ``jax.lax.associative_scan`` over the sequence (the
 diagonal recurrence composes associatively); decode is the O(1) step.
 Being per-channel diagonal, the recurrence shards cleanly over the channel
-dimension — this is the recurrent-scan sharding noted in DESIGN.md.
+dimension — this is the recurrent-scan sharding noted in docs/DESIGN.md.
 """
 from __future__ import annotations
 

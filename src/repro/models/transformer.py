@@ -330,6 +330,41 @@ def effective_window(cfg, seq_len: int) -> int | None:
     return None
 
 
+def _scan_stack_with_cache(cfg, blocks, x, cache, layer_body):
+    """Run ``layer_body`` over all layers with the *whole* stacked cache as
+    part of the scan carry (donation-safe zero-copy layout).
+
+    The cache used to stream through the scan as an xs input and come back
+    stacked as a ys output — a layout that forces XLA to double-buffer it
+    (fresh ys allocation + full-size copies every step) even when the jit
+    caller donates the buffer.  Carrying the stack instead and updating
+    layer l's slice with ``dynamic_update_index_in_dim`` lets the compiled
+    while-loop alias the donated input in place: the decode step's cache
+    traffic is exactly one layer-slice write per layer, never a full-cache
+    copy (regression-tested against the lowered HLO in
+    tests/test_zero_copy.py).
+
+    ``layer_body(x, layer_p, cache_l) -> (x, new_cache_l, routed)``.
+    Returns (x, new_cache, routing_ys)."""
+
+    def body(carry, inp):
+        xx, full_cache = carry
+        lp, l = inp
+        cl = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, l, axis=0,
+                                                   keepdims=False),
+            full_cache)
+        xx, ncl, routed = layer_body(xx, lp, cl)
+        full_cache = jax.tree.map(
+            lambda a, n: jax.lax.dynamic_update_index_in_dim(a, n, l, axis=0),
+            full_cache, ncl)
+        return (xx, full_cache), routed
+
+    (x, new_cache), routing = jax.lax.scan(
+        body, (x, cache), (blocks, jnp.arange(cfg.num_layers)))
+    return x, new_cache, routing
+
+
 def decode_stack(cfg, mesh, blocks, x, lengths, cache, window,
                  mrope_pos=None, token_mask=None):
     """One-token decode through all layers. x: (B,1,D).
@@ -337,7 +372,11 @@ def decode_stack(cfg, mesh, blocks, x, lengths, cache, window,
     Returns (x, new_cache, routing) — ``routing`` is the stacked per-layer
     MoE decision (L, B, K) int32 for the moe family, else None.  It rides
     out of the scan as a ys output, so capturing it costs no extra router
-    evaluation (the serving engine's tracker consumes it device-side)."""
+    evaluation (the serving engine's tracker consumes it device-side).
+
+    The cache travels through the layer scan as a carry updated in place
+    (see ``_scan_stack_with_cache``), so a caller that donates it gets a
+    zero-copy steady-state decode step."""
     if cfg.family == "hybrid":
         pat = hybrid_pattern(cfg)
         new_rec, new_attn = [], []
@@ -361,20 +400,26 @@ def decode_stack(cfg, mesh, blocks, x, lengths, cache, window,
         return x, {"rec": stack(new_rec), "attn": stack(new_attn)}, None
 
     if cfg.family == "ssm":
-        def body(xx, inp):
-            lp, cl = inp
+        def layer_body(xx, lp, cl):
             out, nc, _ = _ssm_block(cfg, lp, xx, cl, decode=True)
-            return out, (nc, None)
-    else:
-        def body(xx, inp):
-            lp, cl = inp
-            out, nc, _, routed = _attn_mlp_block(cfg, mesh, lp, xx, lengths,
-                                                 window, mrope_pos, cl,
-                                                 decode=True,
-                                                 token_mask=token_mask)
-            return out, (nc, routed)
+            return out, nc, jnp.zeros((), jnp.int32)
+        x, new_cache, _ = _scan_stack_with_cache(cfg, blocks, x, cache,
+                                                 layer_body)
+        return x, new_cache, None
 
-    x, (new_cache, routing) = jax.lax.scan(body, x, (blocks, cache))
+    def layer_body(xx, lp, cl):
+        out, nc, _, routed = _attn_mlp_block(cfg, mesh, lp, xx, lengths,
+                                             window, mrope_pos, cl,
+                                             decode=True,
+                                             token_mask=token_mask)
+        if routed is None:           # dense/vlm/audio: no capture
+            routed = jnp.zeros((), jnp.int32)
+        return out, nc, routed
+
+    x, new_cache, routing = _scan_stack_with_cache(cfg, blocks, x, cache,
+                                                   layer_body)
+    if cfg.family != "moe":
+        routing = None
     return x, new_cache, routing
 
 
@@ -408,18 +453,24 @@ def prefill_stack(cfg, mesh, blocks, x, positions, cache, window,
         return x, {"rec": stack(new_rec), "attn": stack(new_attn)}, None
 
     if cfg.family == "ssm":
-        def body(xx, inp):
-            lp, cl = inp
+        def layer_body(xx, lp, cl):
             out, nc, _ = _ssm_block(cfg, lp, seq_constrain(mesh, xx), cl)
-            return out, (nc, None)
-    else:
-        def body(xx, inp):
-            lp, cl = inp
-            out, nc, _, routed = _attn_mlp_block(cfg, mesh, lp,
-                                                 seq_constrain(mesh, xx),
-                                                 positions, window, mrope_pos,
-                                                 cl, token_mask=token_mask)
-            return out, (nc, routed)
+            return out, nc, jnp.zeros((), jnp.int32)
+        x, new_cache, _ = _scan_stack_with_cache(cfg, blocks, x, cache,
+                                                 layer_body)
+        return x, new_cache, None
 
-    x, (new_cache, routing) = jax.lax.scan(body, x, (blocks, cache))
+    def layer_body(xx, lp, cl):
+        out, nc, _, routed = _attn_mlp_block(cfg, mesh, lp,
+                                             seq_constrain(mesh, xx),
+                                             positions, window, mrope_pos,
+                                             cl, token_mask=token_mask)
+        if routed is None:
+            routed = jnp.zeros((), jnp.int32)
+        return out, nc, routed
+
+    x, new_cache, routing = _scan_stack_with_cache(cfg, blocks, x, cache,
+                                                   layer_body)
+    if cfg.family != "moe":
+        routing = None
     return x, new_cache, routing

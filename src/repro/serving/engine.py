@@ -20,6 +20,21 @@ loop production-shaped:
     evaluations**; the paper's Table-1 statistic
     ``E[#exec experts/node/layer]`` is exact, not a layer-0 embedding
     proxy.
+  * **Zero-copy hot loop** — every jit donates its cache operand
+    (``EngineConfig.donate_buffers``), and the model updates the cache with
+    ``dynamic_update_slice`` on a scan carry, so the donated buffer aliases
+    in place: the steady-state decode step contains no full-cache-sized
+    copy (the JAX analogue of the paper's C1 pre-allocated buffers;
+    HLO-verified in tests/test_zero_copy.py).  Small decode batches
+    additionally skip the fixed-capacity dispatch via the capacity-free
+    fast path (``ModelConfig.gather_decode_max_tk``): a per-token
+    expert-weight gather (core/moe.gather_moe) when T·K fits under
+    E_local, or a one-hot dense compute when T is below the capacity
+    floor — on those forms there is no round_capacity padding, no
+    dispatch-plan argsort/scatter and no drops.  When T·K is under the
+    threshold but neither form is cheaper (T·K > E_local and T at/above
+    the capacity floor), the fixed-capacity dispatch still runs with its
+    usual capacity semantics.
   * **Async stepping** — decode steps are dispatched without
     ``block_until_ready``; per-step tokens and routing stay on device in a
     pending buffer and the host syncs only at request-completion
@@ -81,6 +96,16 @@ class EngineConfig:
     track_experts: bool = True
     batched_prefill: bool = True  # False: legacy per-request prefill
     async_steps: bool = True      # False: block_until_ready every step
+    # Donate the cache operand of every jit in the hot loop (the JAX
+    # analogue of the paper's C1 pre-allocated buffers): the model updates
+    # the cache with dynamic_update_slice on a scan *carry*
+    # (transformer._scan_stack_with_cache), so the donated buffer aliases in
+    # place and the steady-state decode step performs no full-cache-sized
+    # copy (HLO-verified in tests/test_zero_copy.py).  False restores the
+    # copy-per-step baseline for A/B measurement.  Values are unaffected
+    # either way; only ``last_tok``/routing stay undonated because async
+    # mode's pending harvest buffer still references them after dispatch.
+    donate_buffers: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,9 +156,14 @@ class ServingEngine:
         self.budgets = np.zeros((b,), np.int32)
         self.last_tok = jnp.zeros((b,), jnp.int32)
         self._pending: list[_Pending] = []
-        self._jit_prefill_batch = jax.jit(self._prefill_batch)
-        self._jit_prefill_one = jax.jit(self._prefill_one)
-        self._jit_decode = jax.jit(self._decode)
+        # cache is argument 1 of every jit body; self.cache is rebound to the
+        # output before the next dispatch, so donating it is always safe.
+        donate = (1,) if self.ecfg.donate_buffers else ()
+        self._jit_prefill_batch = jax.jit(self._prefill_batch,
+                                          donate_argnums=donate)
+        self._jit_prefill_one = jax.jit(self._prefill_one,
+                                        donate_argnums=donate)
+        self._jit_decode = jax.jit(self._decode, donate_argnums=donate)
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
                       "decode_tokens": 0, "prefill_s": 0.0, "decode_s": 0.0,
                       "harvest_s": 0.0, "harvests": 0}
@@ -169,9 +199,18 @@ class ServingEngine:
         return last_tok, cache, routing
 
     def _prefill_one(self, params, cache, tokens, slot, last_tok):
-        """Legacy reference path: batch-1 prefill scattered into ``slot``."""
+        """Legacy reference path: batch-1 prefill scattered into ``slot``.
+
+        The batch-1 working cache is *sliced* out of the full cache rather
+        than zero-materialized: the old ``jnp.zeros`` + scatter pattern
+        allocated a fresh per-slot cache copy every admit, while the slice
+        reads one row and (under donation) scatters it back in place.
+        Prefill overwrites the whole prompt region and decode masks by
+        ``lengths``, so any stale tail beyond the prompt is never attended —
+        the same invariant the batched path relies on when it recomputes
+        in-flight rows under the admit mask."""
         one_cache = jax.tree.map(
-            lambda a: jnp.zeros((a.shape[0], 1) + a.shape[2:], a.dtype)
+            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
             if a.ndim >= 2 else a, cache)
         logits, one_cache, routing = self.model.prefill_routed(
             params, {"tokens": tokens}, one_cache, self.mesh)

@@ -44,10 +44,13 @@ def check_expert_parallel_schedules():
                                 n_valid_experts=cfg.num_experts)
         y_ref = moe_lib.reference_moe(layer_p["experts"], x2d, rout.top_idx,
                                       rout.top_w).reshape(b, s, d)
-        for ep in ("decentralized", "centralized", "a2a"):
+        for ep in ("decentralized", "centralized", "a2a", "a2a_pipelined"):
             for strat in ("dispatch", "dense"):
+                # gather_decode_max_tk=0 keeps the dispatch path exercised
+                # even at small T*K (the gather fast path is checked below)
                 c = cfg.replace(expert_parallel=ep, moe_strategy=strat,
-                                capacity_factor=8.0)
+                                capacity_factor=8.0, ep_microchunks=2,
+                                gather_decode_max_tk=0)
                 y, aux, ti = expert_parallel.moe_layer(c, mesh, layer_p, x)
                 err = float(jnp.max(jnp.abs(y - y_ref)))
                 assert err < 1e-4, (ep, strat, s, err)
@@ -55,7 +58,69 @@ def check_expert_parallel_schedules():
                 # device-captured routing == single-device router decisions
                 np.testing.assert_array_equal(np.asarray(ti),
                                               np.asarray(rout.top_idx))
+        # capacity-free gather decode fast path on the mesh (T*K below the
+        # threshold): same exact output through the decentralized schedule
+        c = cfg.replace(expert_parallel="decentralized",
+                        capacity_factor=8.0, gather_decode_max_tk=4096)
+        y, _, _ = expert_parallel.moe_layer(c, mesh, layer_p, x)
+        err = float(jnp.max(jnp.abs(y - y_ref)))
+        assert err < 1e-4, ("gather", s, err)
     print("PASS expert_parallel_schedules")
+
+
+def check_a2a_pipelined_token_exact():
+    """ISSUE 2 tentpole (b): the microchunked comm/compute-overlapped
+    schedule is token-exact against plain a2a whenever capacity is not
+    binding — identical routing decisions and per-slot contractions; the
+    outputs differ only by XLA's reduction-order reassociation at the
+    different GEMM batch shapes (<1e-6 abs, which never flips a greedy
+    token — asserted end-to-end in check_serving_engine_on_mesh).  a2a
+    matches decentralized in the same regime, and the documented fallbacks
+    engage (m that does not divide T_loc -> a2a; single-token decode ->
+    decentralized), bitwise, since they run the same code."""
+    mesh = make_test_mesh(2, 4)
+    cfg = get_config("qwen3_moe_30b_a3b").reduced().replace(
+        capacity_factor=8.0, gather_decode_max_tk=0)
+    key = jax.random.PRNGKey(17)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts_padded
+    layer_p = {
+        "router": jax.random.normal(key, (d, e)) * 0.1,
+        "experts": {
+            "w_gate": jax.random.normal(jax.random.fold_in(key, 1), (e, d, f)) * 0.05,
+            "w_up": jax.random.normal(jax.random.fold_in(key, 2), (e, d, f)) * 0.05,
+            "w_down": jax.random.normal(jax.random.fold_in(key, 3), (e, f, d)) * 0.05,
+        },
+    }
+    b, s = 4, 16                       # T_loc = (4/2)*(16/4) = 8 per shard
+    x = jax.random.normal(jax.random.fold_in(key, 4), (b, s, d))
+    y_a2a, _, ti_a2a = expert_parallel.moe_layer(
+        cfg.replace(expert_parallel="a2a"), mesh, layer_p, x)
+    y_dec, _, _ = expert_parallel.moe_layer(
+        cfg.replace(expert_parallel="decentralized"), mesh, layer_p, x)
+    for m in (2, 4, 8):
+        c = cfg.replace(expert_parallel="a2a_pipelined", ep_microchunks=m)
+        y_p, aux, ti = expert_parallel.moe_layer(c, mesh, layer_p, x)
+        np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_a2a),
+                                   rtol=0, atol=1e-5, err_msg=f"m={m}")
+        np.testing.assert_array_equal(np.asarray(ti), np.asarray(ti_a2a))
+        assert np.isfinite(float(aux))
+    # a2a == decentralized token-exact under non-binding capacity
+    err = float(jnp.max(jnp.abs(y_a2a - y_dec)))
+    assert err < 1e-5, err
+    # m=3 does not divide T_loc=8: falls back to plain a2a, still exact
+    y_f, _, _ = expert_parallel.moe_layer(
+        cfg.replace(expert_parallel="a2a_pipelined", ep_microchunks=3),
+        mesh, layer_p, x)
+    np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_a2a))
+    # single-token decode: falls back to the decentralized schedule
+    x1 = jax.random.normal(jax.random.fold_in(key, 5), (b, 1, d))
+    y1_p, _, _ = expert_parallel.moe_layer(
+        cfg.replace(expert_parallel="a2a_pipelined", ep_microchunks=2),
+        mesh, layer_p, x1)
+    y1_d, _, _ = expert_parallel.moe_layer(
+        cfg.replace(expert_parallel="decentralized"), mesh, layer_p, x1)
+    np.testing.assert_array_equal(np.asarray(y1_p), np.asarray(y1_d))
+    print("PASS a2a_pipelined_token_exact")
 
 
 def check_cp_decode_matches_single_device():
@@ -210,8 +275,8 @@ def check_padded_experts_dead_on_mesh():
                             cfg.experts_per_token)
     y_ref = moe_lib.reference_moe(real, x2d, rout.top_idx,
                                   rout.top_w).reshape(4, 8, d)
-    for ep in ("decentralized", "centralized", "a2a"):
-        c = cfg.replace(expert_parallel=ep)
+    for ep in ("decentralized", "centralized", "a2a", "a2a_pipelined"):
+        c = cfg.replace(expert_parallel=ep, ep_microchunks=2)
         y, _, _ = expert_parallel.moe_layer(c, mesh, layer_p, x)
         err = float(jnp.max(jnp.abs(y - y_ref)))
         assert err < 1e-4, (ep, err)
@@ -282,25 +347,32 @@ def check_serving_engine_on_mesh():
     tokens as the single-device engine."""
     from repro.serving.engine import EngineConfig, ServingEngine
     mesh = make_test_mesh(2, 4)
-    cfg = get_config("qwen3_moe_30b_a3b").reduced().replace(
+    base = get_config("qwen3_moe_30b_a3b").reduced().replace(
         capacity_factor=8.0, kv_cache_shard="none")
     ecfg = EngineConfig(max_batch=2, prefill_len=8, max_cache=24,
                         track_experts=False)
-    prompts = [np.arange(5) % cfg.vocab_size, (np.arange(7) * 3) % cfg.vocab_size]
+    prompts = [np.arange(5) % base.vocab_size,
+               (np.arange(7) * 3) % base.vocab_size]
 
-    outs = {}
-    for name, m in (("single", None), ("mesh", mesh)):
-        eng = ServingEngine(cfg, ecfg, rng=jax.random.PRNGKey(5), mesh=m)
-        for p_ in prompts:
-            eng.submit(p_, max_new_tokens=4)
-        done = sorted(eng.run_until_done(), key=lambda r: r.uid)
-        outs[name] = [r.generated for r in done]
-    assert outs["single"] == outs["mesh"], outs
+    # decentralized = the paper's design; a2a_pipelined = the overlapped
+    # schedule end-to-end (prefill pipelines, decode falls back); both run
+    # with donation + the gather decode fast path (engine defaults)
+    for ep in ("decentralized", "a2a_pipelined"):
+        cfg = base.replace(expert_parallel=ep, ep_microchunks=2)
+        outs = {}
+        for name, m in (("single", None), ("mesh", mesh)):
+            eng = ServingEngine(cfg, ecfg, rng=jax.random.PRNGKey(5), mesh=m)
+            for p_ in prompts:
+                eng.submit(p_, max_new_tokens=4)
+            done = sorted(eng.run_until_done(), key=lambda r: r.uid)
+            outs[name] = [r.generated for r in done]
+        assert outs["single"] == outs["mesh"], (ep, outs)
     print("PASS serving_engine_on_mesh")
 
 
 CHECKS = [
     check_expert_parallel_schedules,
+    check_a2a_pipelined_token_exact,
     check_padded_experts_dead_on_mesh,
     check_expert_replication_overlap,
     check_serving_engine_on_mesh,

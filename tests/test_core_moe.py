@@ -111,6 +111,45 @@ def test_dispatch_plan_properties(t, k, e, cap, seed):
         assert valid[le * cap:(le + 1) * cap].sum() <= cap
 
 
+@settings(max_examples=30, deadline=None)
+@given(
+    t=st.integers(1, 48),
+    k=st.integers(1, 4),
+    e=st.sampled_from([4, 8, 16]),
+    cap=st.sampled_from([1, 2, 4]),     # small: force capacity pressure
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dispatch_drops_deterministic_and_stable_ordered(t, k, e, cap, seed):
+    """Under capacity pressure, ``make_dispatch_plan`` drops must be (1)
+    deterministic — identical plans on identical inputs — and (2)
+    stable-ordered: each expert keeps exactly the FIRST ``cap`` routing
+    decisions in flat row-major (t, k) order and drops the rest, with slot
+    ranks following that order.  The serving engine's batched==sequential
+    token equality and the a2a/decentralized schedule equivalence both rest
+    on this invariant."""
+    key = jax.random.PRNGKey(seed)
+    top_idx = jax.random.randint(key, (t, k), 0, e).astype(jnp.int32)
+    plan_a = moe.make_dispatch_plan(top_idx, e, 0, e, cap)
+    plan_b = moe.make_dispatch_plan(top_idx, e, 0, e, cap)
+    for a, b in zip(plan_a, plan_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    tok, valid, slot_of = map(np.asarray, plan_a)
+    nbuf = e * cap
+    flat = np.asarray(top_idx).reshape(-1)
+    flat_slot = slot_of.reshape(-1)
+    for ex in range(e):
+        decisions = np.nonzero(flat == ex)[0]          # flat row-major order
+        kept = [i for i in decisions if flat_slot[i] < nbuf]
+        # first-come-first-kept, everything past capacity dropped
+        assert kept == list(decisions[:cap])
+        # ranks are assigned in arrival order within the expert's slots
+        slots = [flat_slot[i] for i in kept]
+        assert slots == sorted(slots)
+        for i in decisions[cap:]:
+            assert flat_slot[i] == nbuf                # dropped sentinel
+
+
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), t=st.sampled_from([8, 32]))
 def test_dispatch_moe_matches_reference_at_high_capacity(seed, t):
@@ -141,6 +180,43 @@ def test_dense_moe_matches_reference():
             for n in range(2))
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), t=st.sampled_from([1, 4, 16]))
+def test_gather_moe_matches_reference(seed, t):
+    """Capacity-free gather fast path == exact per-token reference, both on
+    a single shard and as two half-shard partial sums."""
+    key = jax.random.PRNGKey(seed)
+    e, d, f, k = 8, 16, 32, 2
+    experts = rand_experts(jax.random.fold_in(key, 1), e, d, f)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (t, d))
+    w = jax.random.normal(jax.random.fold_in(key, 3), (d, e))
+    out = router.route(w, x, k)
+    y_ref = moe.reference_moe(experts, x, out.top_idx, out.top_w)
+    y1 = moe.gather_moe(experts, x, out.top_idx, out.top_w, e_start=0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-5)
+    y2 = sum(moe.gather_moe(jax.tree.map(lambda a: a[n * 4:(n + 1) * 4],
+                                         experts),
+                            x, out.top_idx, out.top_w, e_start=n * 4)
+             for n in range(2))
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_gather_moe_dead_sentinel_contributes_zero():
+    """_mask_rout dead-routes tokens to index E (one past the padded expert
+    range); the gather path must clip the index and zero the weight."""
+    key = jax.random.PRNGKey(13)
+    e, d, f = 4, 8, 16
+    experts = rand_experts(key, e, d, f)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (3, d))
+    top_idx = jnp.array([[0, 1], [e, e], [2, e]], jnp.int32)  # E = sentinel
+    top_w = jnp.where(top_idx < e, 0.5, 0.0)
+    y = moe.gather_moe(experts, x, top_idx, top_w, e_start=0)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    np.testing.assert_allclose(np.asarray(y[1]), 0.0, atol=1e-7)
 
 
 def test_capacity_drop_degrades_gracefully():

@@ -24,6 +24,7 @@ def run_checks(*names, timeout=900):
 
 @pytest.mark.parametrize("check", [
     "check_expert_parallel_schedules",
+    "check_a2a_pipelined_token_exact",
     "check_padded_experts_dead_on_mesh",
     "check_expert_replication_overlap",
     "check_serving_engine_on_mesh",

@@ -76,9 +76,35 @@ def test_latency_dominates_transfer_on_10gbe():
 
 def test_tpu_regime_inversion():
     """On TPU v5e ICI the comm term is bandwidth-dominated — the paper's
-    latency-dominated regime inverts (DESIGN.md §2)."""
+    latency-dominated regime inverts (docs/DESIGN.md §2)."""
     e = pm.estimate(pm.DBRX_TABLE1, pm.TPU_V5E, 16)
     assert e.latency_time < e.transfer_time
+
+
+def test_overlap_term_models_pipelined_schedule():
+    """estimate(..., microchunks=m): m=1 reproduces the serial Eq. (1);
+    m>1 bounds the token at m*latency + max(gpu, transfer) +
+    min(gpu, transfer)/m — never better than the exposed slower stage,
+    never worse than the serial sum when latency is negligible."""
+    w, hw = pm.DBRX_TABLE1, pm.M2_ULTRA_ROCE
+    serial = pm.estimate(w, hw, 2)
+    assert pm.estimate(w, hw, 2, microchunks=1).total == serial.total
+    for m in (2, 4, 8):
+        e = pm.estimate(w, hw, 2, microchunks=m)
+        assert e.total >= max(e.gpu_time, e.transfer_time)
+        expected = (e.latency_time * m + max(e.gpu_time, e.transfer_time)
+                    + min(e.gpu_time, e.transfer_time) / m)
+        assert abs(e.total - expected) < 1e-12
+    # zero-latency hardware: overlap strictly beats serial and improves
+    # monotonically with m
+    hw0 = pm.HardwareProfile("lat0", hw.mem_bw, hw.peak_flops, 0.0, hw.comm_bw)
+    totals = [pm.estimate(w, hw0, 2, microchunks=m).total
+              for m in (1, 2, 4, 8)]
+    assert all(a > b for a, b in zip(totals, totals[1:]))
+    # on 10 GbE the per-round latency dominates: microchunking HURTS —
+    # the model must show the regime, not just the win
+    assert pm.estimate(w, pm.M2_ULTRA_10GBE, 2, microchunks=8).total \
+        > pm.estimate(w, pm.M2_ULTRA_10GBE, 2).total
 
 
 def test_scalability_trend_matches_table4():

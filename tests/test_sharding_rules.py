@@ -1,5 +1,5 @@
 """Production-mesh PartitionSpec rules, checked against the divisibility
-decisions recorded in DESIGN.md §4 — on an AbstractMesh (no devices)."""
+decisions recorded in docs/DESIGN.md §4 — on an AbstractMesh (no devices)."""
 import jax
 import jax.numpy as jnp
 import pytest
