@@ -13,7 +13,18 @@ Compares, on identical params / requests / config:
   * zerocopy — async + cache donation (``EngineConfig.donate_buffers``, the
     paper's C1 analogue: the decode step aliases the KV cache in place) +
     the capacity-free gather decode path (``cfg.gather_decode_max_tk``,
-    core/moe.gather_moe): the current production configuration.
+    core/moe.gather_moe): the PR 2 production configuration;
+  * unified  — the PR 3 production path: zerocopy + the unified
+    token-budget step (``EngineConfig.unified_step``): chunked prefill and
+    mixed prefill/decode batches in ONE jit program, admissions never
+    stall decode.
+
+A staggered-arrival round (``run_staggered``, skip with
+``--skip-staggered``) A/Bs the two-program reference against the unified
+scheduler on TTFT p50/p95 and decode-stall time — the latency metrics the
+throughput table cannot show.  Under ``--equal-capacity`` every prompt is
+pinned to exactly ``--prompt-len`` tokens so the padding-free unified
+engine must be token-identical to the padded reference modes.
 
     PYTHONPATH=src python -m benchmarks.serving_engine \
         [--arch qwen3_moe_30b_a3b] [--requests 8] [--new-tokens 24]
@@ -40,27 +51,43 @@ from repro.serving.engine import EngineConfig, ServingEngine
 # mode -> (EngineConfig overrides, gather decode fast path enabled)
 MODES = {
     "legacy": (dict(batched_prefill=False, async_steps=False,
-                    donate_buffers=False), False),
+                    donate_buffers=False, unified_step=False), False),
     "batched": (dict(batched_prefill=True, async_steps=False,
-                     donate_buffers=False), False),
+                     donate_buffers=False, unified_step=False), False),
     "async": (dict(batched_prefill=True, async_steps=True,
-                   donate_buffers=False), False),
+                   donate_buffers=False, unified_step=False), False),
     "zerocopy": (dict(batched_prefill=True, async_steps=True,
-                      donate_buffers=True), True),
+                      donate_buffers=True, unified_step=False), True),
+    # unified token-budget engine (PR 3): chunked prefill + mixed
+    # prefill/decode batches in ONE jit program, admits never stall decode
+    "unified": (dict(batched_prefill=True, async_steps=True,
+                     donate_buffers=True, unified_step=True), True),
 }
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_serving.json")
 
 
-def run_mode(cfg, mode_kw, *, requests, new_tokens, prompt_len, max_batch,
-             seed=0):
-    eng = ServingEngine(cfg, EngineConfig(
+def make_engine(cfg, mode_kw, *, prompt_len, new_tokens, max_batch,
+                chunk_len):
+    return ServingEngine(cfg, EngineConfig(
         max_batch=max_batch, prefill_len=prompt_len,
-        max_cache=prompt_len + new_tokens + 8, **mode_kw),
-        rng=jax.random.PRNGKey(0))
+        max_cache=prompt_len + new_tokens + 8, chunk_len=chunk_len,
+        **mode_kw), rng=jax.random.PRNGKey(0))
+
+
+def run_mode(cfg, mode_kw, *, requests, new_tokens, prompt_len, max_batch,
+             chunk_len, seed=0, full_len=False):
+    eng = make_engine(cfg, mode_kw, prompt_len=prompt_len,
+                      new_tokens=new_tokens, max_batch=max_batch,
+                      chunk_len=chunk_len)
     rng = np.random.default_rng(seed)
+    # full_len pins every prompt at exactly prompt_len so the unified
+    # (no-padding) engine is comparable token-for-token with the padded
+    # reference modes (shorter prompts legitimately diverge: the reference
+    # attends its zero padding)
     prompts = [rng.integers(0, cfg.vocab_size,
+                            prompt_len if full_len else
                             int(rng.integers(prompt_len // 2, prompt_len + 1)))
                for _ in range(requests)]
     # warmup: compile prefill + decode traces outside the timed region,
@@ -87,6 +114,56 @@ def run_mode(cfg, mode_kw, *, requests, new_tokens, prompt_len, max_batch,
     }
 
 
+def run_staggered(cfg, mode_kw, *, requests, new_tokens, prompt_len,
+                  max_batch, chunk_len, stagger_steps=4, seed=0):
+    """Staggered-arrival latency workload: requests trickle in every
+    ``stagger_steps`` engine iterations while earlier requests decode, so
+    every admission after the first hits in-flight decode rows.  Reports
+    TTFT p50/p95 and decode-stall time — the metrics the unified scheduler
+    exists to improve (reference mode runs a separate whole-prompt padded
+    prefill program that stalls every active decode slot; unified mode
+    interleaves prefill chunks into the decode iterations).
+
+    Sync stepping is forced for every mode: TTFT is stamped at harvest
+    boundaries, and async coalescing would charge deferred harvests to the
+    first token (see ServingEngine.ttft)."""
+    kw = dict(mode_kw, async_steps=False)
+    eng = make_engine(cfg, kw, prompt_len=prompt_len, new_tokens=new_tokens,
+                      max_batch=max_batch, chunk_len=chunk_len)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len)
+               for _ in range(requests)]
+    eng.submit(prompts[0], max_new_tokens=2)     # warmup (compile)
+    eng.run_until_done()
+    for k in eng.stats:
+        eng.stats[k] = type(eng.stats[k])()
+
+    t0 = time.perf_counter()
+    pending = list(prompts)
+    eng.submit(pending.pop(0), max_new_tokens=new_tokens)
+    steps = 0
+    while pending or eng.queue or any(s is not None for s in eng.slots):
+        eng.step()
+        steps += 1
+        if pending and steps % stagger_steps == 0:
+            eng.submit(pending.pop(0), max_new_tokens=new_tokens)
+        if steps > 100_000:
+            raise RuntimeError("staggered workload did not drain")
+    eng.flush()
+    wall = time.perf_counter() - t0
+    tp = eng.throughput()
+    # since=t0 excludes the warmup request's compile-time TTFT
+    tt = eng.ttft(since=t0)
+    return {
+        "wall_s": wall,
+        "ttft_p50_ms": tt["p50"] * 1e3,
+        "ttft_p95_ms": tt["p95"] * 1e3,
+        "decode_stall_ms": tp["decode_stall_s"] * 1e3,
+        "tok_per_s_wall": requests * (prompt_len + new_tokens) / wall,
+        "n_ttft": tt["n"],
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_moe_30b_a3b")
@@ -105,6 +182,12 @@ def main():
                     help="free-form provenance note stored in "
                          "BENCH_serving.json (e.g. cross-PR baseline "
                          "measurements taken outside this run)")
+    ap.add_argument("--chunk-len", type=int, default=16,
+                    help="unified mode: prefill chunk / block width")
+    ap.add_argument("--stagger-steps", type=int, default=4,
+                    help="staggered workload: iterations between arrivals")
+    ap.add_argument("--skip-staggered", action="store_true",
+                    help="skip the staggered-arrival TTFT/stall A/B round")
     args = ap.parse_args()
 
     base_cfg = get_config(args.arch).reduced()
@@ -121,7 +204,9 @@ def main():
             reps[name].append(run_mode(cfg, kw, requests=args.requests,
                                        new_tokens=args.new_tokens,
                                        prompt_len=args.prompt_len,
-                                       max_batch=args.max_batch))
+                                       max_batch=args.max_batch,
+                                       chunk_len=args.chunk_len,
+                                       full_len=args.equal_capacity))
             # identical engines must generate identical tokens every rep
             assert reps[name][-1]["generated"] == reps[name][0]["generated"], \
                 name
@@ -153,18 +238,56 @@ def main():
     if args.equal_capacity:
         assert gens["legacy"] == gens["batched"], \
             "modes diverged in the no-drop regime"
+        # unified == two-program reference, token for token: full-length
+        # prompts (padding-free) + non-binding capacity (chunk-local
+        # dispatch pools) make the chunked/mixed-batch schedule exactly
+        # token-neutral — the PR 3 acceptance gate, also run in CI
+        assert gens["unified"] == gens["zerocopy"], \
+            "unified step diverged from the two-program reference"
 
     speedup = (results["async"]["tok_per_s_wall"]
                / results["legacy"]["tok_per_s_wall"])
     speedup_zc = (results["zerocopy"]["tok_per_s_wall"]
                   / results["async"]["tok_per_s_wall"])
+    speedup_uni = (results["unified"]["tok_per_s_wall"]
+                   / results["zerocopy"]["tok_per_s_wall"])
     print(markdown_table(
         ["mode", "wall s", "tok/s (wall)", "prefill tok/s", "decode tok/s"],
         rows))
     print(f"\nasync+batched vs legacy speedup: {speedup:.2f}x")
     print(f"zerocopy (donation+gather) vs async speedup: {speedup_zc:.2f}x")
+    print(f"unified vs zerocopy (throughput) : {speedup_uni:.2f}x")
     results["speedup_async_vs_legacy"] = speedup
     results["speedup_zerocopy_vs_async"] = speedup_zc
+    results["speedup_unified_vs_zerocopy"] = speedup_uni
+
+    # staggered-arrival latency A/B: two-program reference vs unified,
+    # interleaved rounds, best (lowest) TTFT p95 kept per mode — the
+    # latency story (TTFT under concurrent load, decode-stall time) that
+    # wall-clock tok/s cannot show
+    staggered = {}
+    if not args.skip_staggered:
+        srep: dict[str, list] = {"reference": [], "unified": []}
+        for _ in range(max(args.repeat, 1)):
+            for sname, mode in (("reference", "zerocopy"),
+                                ("unified", "unified")):
+                kw, gather = MODES[mode]
+                cfg = (base_cfg if gather
+                       else base_cfg.replace(gather_decode_max_tk=0))
+                srep[sname].append(run_staggered(
+                    cfg, kw, requests=args.requests,
+                    new_tokens=args.new_tokens, prompt_len=args.prompt_len,
+                    max_batch=args.max_batch, chunk_len=args.chunk_len,
+                    stagger_steps=args.stagger_steps))
+        for sname, rr in srep.items():
+            staggered[sname] = min(rr, key=lambda r: r["ttft_p95_ms"])
+        print("\nstaggered arrivals (sync stepping, full-length prompts):")
+        print(markdown_table(
+            ["mode", "TTFT p50 ms", "TTFT p95 ms", "stall ms", "tok/s"],
+            [[sname, f"{r['ttft_p50_ms']:.1f}", f"{r['ttft_p95_ms']:.1f}",
+              f"{r['decode_stall_ms']:.1f}", f"{r['tok_per_s_wall']:.1f}"]
+             for sname, r in staggered.items()]))
+        results["staggered"] = staggered
     path = save_result("serving_engine", results)
     print(f"saved {path}")
 
@@ -175,6 +298,7 @@ def main():
         "config": {
             "requests": args.requests, "new_tokens": args.new_tokens,
             "prompt_len": args.prompt_len, "max_batch": args.max_batch,
+            "chunk_len": args.chunk_len,
             "equal_capacity": bool(args.equal_capacity),
             "capacity_factor": base_cfg.capacity_factor,
             "gather_decode_max_tk": base_cfg.gather_decode_max_tk,
@@ -185,7 +309,10 @@ def main():
                              for k in MODES},
         "speedup_async_vs_legacy": speedup,
         "speedup_zerocopy_vs_async": speedup_zc,
+        "speedup_unified_vs_zerocopy": speedup_uni,
     }
+    if staggered:
+        bench["staggered_ab"] = staggered
     if args.note:
         bench["note"] = args.note
     with open(BENCH_JSON, "w") as f:

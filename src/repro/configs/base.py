@@ -188,9 +188,21 @@ class ModelConfig:
 @dataclasses.dataclass(frozen=True)
 class ShapeSpec:
     name: str
-    kind: str            # train | prefill | decode
-    seq_len: int
+    kind: str            # train | prefill | decode | mixed
+    seq_len: int         # mixed: the cache/context length
     global_batch: int
+    # mixed (unified token-budget step, serving/engine.py unified_step):
+    # width of the (B, chunk_len) token block each iteration packs with
+    # per-row cache offsets — prefill chunks and decode rows share it
+    chunk_len: int = 0
+
+
+def mixed_shape(name: str, cache_len: int, batch: int,
+                chunk_len: int) -> ShapeSpec:
+    """ShapeSpec for the unified mixed prefill/decode step
+    (``Model.forward_routed``): a (batch, chunk_len) token block against a
+    ``cache_len`` cache."""
+    return ShapeSpec(name, "mixed", cache_len, batch, chunk_len=chunk_len)
 
 
 SHAPES: dict[str, ShapeSpec] = {
@@ -233,6 +245,14 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
         if shape.kind == "prefill":
             specs.pop("labels")
         return specs
+    if shape.kind == "mixed":
+        # unified token-budget step (Model.forward_routed): a (B, chunk)
+        # token block at per-row cache offsets — chunked prefill, decode
+        # and mixed batches share these inputs
+        c = max(shape.chunk_len, 1)
+        return {"tokens": _sds((b, c), jnp.int32),
+                "lengths": _sds((b,), jnp.int32),
+                "seg_lens": _sds((b,), jnp.int32)}
     # decode: one new token against a cache of seq_len
     specs = {"tokens": _sds((b, 1), jnp.int32),
              "lengths": _sds((b,), jnp.int32)}

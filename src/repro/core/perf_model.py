@@ -11,7 +11,12 @@ projections, and Table 5's cost-efficiency comparison.  Beyond the paper,
 ``estimate(..., microchunks=m)`` extends Eq. (1) with a comm/compute
 overlap term modelling the ``a2a_pipelined`` schedule
 (core/expert_parallel): serial gpu+comm becomes the pipelined bound
-m·latency + max(gpu, transfer) + min(gpu, transfer)/m.  The same equation
+m·latency + max(gpu, transfer) + min(gpu, transfer)/m; and
+``mixed_step_estimate``/``chunked_prefill_ttft`` model the unified
+mixed prefill/decode iteration (serving/engine.py ``unified_step``,
+docs/DESIGN.md §6) with a ``chunk_len`` knob — the prefill chunk rides on
+expert weights the decode rows already load, so interleaving is nearly
+free in the load-bound regime while smaller chunks add latency rounds.  The same equation
 parameterized with TPU v5e constants is the seed of the roofline analysis
 in benchmarks/roofline.py (compute/memory terms from the compiled HLO
 replace the napkin FLOPs/bytes; the comm term becomes the collective term).
@@ -199,6 +204,61 @@ def scaling_table(w: MoEWorkload = DBRX_TABLE1,
             row["tokens_per_sec_pipelined"] = ep.throughput
         rows.append(row)
     return rows
+
+
+def mixed_step_estimate(w: MoEWorkload, hw: HardwareProfile, n_nodes: int,
+                        decode_rows: int, chunk_len: int,
+                        num_experts: int = 16, top_k: int = 4,
+                        microchunks: int = 1) -> Estimate:
+    """Per-ITERATION bound for the unified mixed prefill/decode batch
+    (serving/engine.py ``unified_step``): ``decode_rows`` decode tokens plus
+    one ``chunk_len``-token prefill chunk share a single program.
+
+    Eq. (1) is per *token*; a mixed iteration amortizes the weight-load
+    term across all t = decode_rows + chunk_len tokens in the block — the
+    expected number of DISTINCT experts touched grows sublinearly in t
+    (``expected_experts_per_node`` with batch=t) while FLOPs and comm
+    payload scale linearly.  This is exactly why interleaving prefill
+    chunks into decode batches is nearly free on load-bound hardware (the
+    paper's regime): the chunk rides on weights the decode rows already
+    paid to load.  ``chunk_len=0`` recovers the decode-only iteration."""
+    t = max(decode_rows + chunk_len, 1)
+    per_node = expected_experts_per_node(num_experts, top_k, n_nodes,
+                                         batch=t)
+    bytes_loaded = w.params_sa_bytes + w.params_expert_bytes * per_node
+    # Per-NODE FLOPs, matching estimate()'s Eq. (1) convention: the shared
+    # layers run on every node (w.flops_sa per token), while the t*top_k
+    # token-expert FFN pairs spread across the n_nodes expert shards
+    # (w.flops_expert is one expert's FFN over all layers, per token)
+    flops = w.flops_sa * t + w.flops_expert * top_k * t / n_nodes
+    return Estimate(
+        load_time=bytes_loaded / hw.mem_bw,
+        compute_time=flops / hw.peak_flops,
+        latency_time=hw.comm_latency * w.n_layers,
+        transfer_time=w.comm_bytes * t / hw.comm_bw,
+        microchunks=microchunks,
+    )
+
+
+def chunked_prefill_ttft(w: MoEWorkload, hw: HardwareProfile, n_nodes: int,
+                         prompt_len: int, chunk_len: int,
+                         decode_rows: int = 0, num_experts: int = 16,
+                         top_k: int = 4) -> float:
+    """Modelled time-to-first-token of a ``prompt_len`` prompt streamed in
+    ``chunk_len`` chunks through iterations shared with ``decode_rows``
+    in-flight decode rows: ceil(P/c) mixed iterations, the last of which
+    samples token 1.  Shrinking ``chunk_len`` lowers the per-iteration
+    latency decode rows see but adds iterations (each paying the per-layer
+    collective latency) — the knob the unified scheduler's ``token_budget``
+    exposes."""
+    iters = max(-(-prompt_len // max(chunk_len, 1)), 1)
+    last = prompt_len - (iters - 1) * chunk_len
+    total = 0.0
+    for i in range(iters):
+        c = chunk_len if i < iters - 1 else last
+        total += mixed_step_estimate(w, hw, n_nodes, decode_rows, c,
+                                     num_experts, top_k).total
+    return total
 
 
 def cost_efficiency(throughput: float, n_nodes: int,

@@ -11,9 +11,14 @@ it is computed from the routing decisions the device returns as auxiliary
 forward-pass outputs, not from a host-side router replay (the decode hot
 loop performs zero host-side router evaluations).
 
-``--legacy`` restores the seed engine's behaviour (per-request batch-1
-prefill, a blocking host sync every decode step) for A/B comparison —
-``python -m benchmarks.serving_engine`` automates that comparison.
+The default engine is the unified token-budget scheduler
+(``EngineConfig.unified_step``): chunked prefill streamed through the cache
+and mixed prefill/decode batches in one jit program, so admissions never
+stall decode and TTFT/stall are reported honestly.  ``--reference``
+restores the two-program engine (padded whole-prompt prefill + decode);
+``--legacy`` additionally restores the seed engine's behaviour
+(per-request batch-1 prefill, a blocking host sync every decode step) —
+``python -m benchmarks.serving_engine`` automates the comparison.
 """
 from __future__ import annotations
 
@@ -27,22 +32,36 @@ from repro.serving.engine import EngineConfig, ServingEngine
 
 
 def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
-               max_batch: int = 4, seed: int = 0, legacy: bool = False):
+               max_batch: int = 4, seed: int = 0, legacy: bool = False,
+               unified: bool = True, chunk_len: int = 32,
+               token_budget: int = 0, temperature: float = 0.0,
+               top_k: int = 0):
     eng = ServingEngine(cfg, EngineConfig(
         max_batch=max_batch, prefill_len=prompt_len,
         max_cache=prompt_len + new_tokens + 8,
-        batched_prefill=not legacy, async_steps=not legacy))
+        batched_prefill=not legacy, async_steps=not legacy,
+        unified_step=unified and not legacy, chunk_len=chunk_len,
+        token_budget=token_budget))
     rng = np.random.default_rng(seed)
     for _ in range(requests):
         plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
-        eng.submit(rng.integers(0, cfg.vocab_size, plen), new_tokens)
+        eng.submit(rng.integers(0, cfg.vocab_size, plen), new_tokens,
+                   temperature=temperature, top_k=top_k)
     done = eng.run_until_done()
     tp = eng.throughput()
-    mode = "legacy (seq prefill, sync)" if legacy else "batched + async"
+    mode = ("legacy (seq prefill, sync)" if legacy
+            else "unified token-budget" if eng.unified
+            else "batched + async (reference)")
     print(f"completed {len(done)} requests [{mode}]")
     print(f"prompt-eval throughput : {tp['prefill_tok_per_s']:.1f} tok/s")
     print(f"generation throughput  : {tp['decode_tok_per_s']:.1f} tok/s")
     print(f"overall throughput     : {tp['total_tok_per_s']:.1f} tok/s")
+    print(f"prefill padding overhead: {tp['prefill_padding_overhead']:.1%}  "
+          f"decode stall: {tp['decode_stall_s'] * 1e3:.1f} ms")
+    tt = eng.ttft()
+    if tt["n"]:
+        print(f"TTFT p50/p95           : {tt['p50'] * 1e3:.1f} / "
+              f"{tt['p95'] * 1e3:.1f} ms over {tt['n']} requests")
     if cfg.is_moe:
         for n in (2, 3, 4):
             e = eng.expected_experts_per_node(n)
@@ -65,6 +84,18 @@ def main():
     ap.add_argument("--legacy", action="store_true",
                     help="seed-engine behaviour: per-request prefill + "
                          "per-step host sync (for A/B comparison)")
+    ap.add_argument("--reference", action="store_true",
+                    help="two-program reference engine (batched padded "
+                         "prefill + decode; unified_step=False)")
+    ap.add_argument("--chunk-len", type=int, default=32,
+                    help="unified mode: prefill chunk / block width")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="unified mode: per-iteration prefill-token cap "
+                         "(0 = unlimited; decode rows are exempt)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k cut (0 = full vocab)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -72,7 +103,9 @@ def main():
         cfg = cfg.reduced()
     serve_demo(cfg, requests=args.requests, new_tokens=args.new_tokens,
                prompt_len=args.prompt_len, max_batch=args.max_batch,
-               legacy=args.legacy)
+               legacy=args.legacy, unified=not args.reference,
+               chunk_len=args.chunk_len, token_budget=args.token_budget,
+               temperature=args.temperature, top_k=args.top_k)
 
 
 if __name__ == "__main__":

@@ -291,32 +291,40 @@ def _update_cache(cache_kv: Array, new_kv: Array, lengths: Array, ring: bool) ->
     return jax.vmap(upd)(cache_kv, new_kv, slot)
 
 
-def _attend_grouped_decode(cfg, q: Array, k_cache: Array, v_cache: Array,
-                           mask: Array) -> Array:
-    """Single-step GQA attention over the cache WITHOUT materializing
-    ``gqa_repeat``: repeating Hkv cache heads to Hq reads (and, in the
-    lowered HLO, copies) the entire KV cache G=Hq/Hkv times per layer per
-    step — it was the residual full-cache-sized copy in the decode program
-    after buffer donation.  Indexing kv heads per q-head group keeps the
-    cache read exactly once (same trick as the CP-decode shard body and any
-    TPU flash decode kernel).
+def _attend_grouped_block(cfg, q: Array, k_cache: Array, v_cache: Array,
+                          mask: Array) -> Array:
+    """Grouped-GQA attention of a (B, Tq) query block over the cache WITHOUT
+    materializing ``gqa_repeat``: repeating Hkv cache heads to Hq reads (and,
+    in the lowered HLO, copies) the entire KV cache G=Hq/Hkv times per layer
+    per step — it was the residual full-cache-sized copy in the decode
+    program after buffer donation.  Indexing kv heads per q-head group keeps
+    the cache read exactly once (same trick as the CP-decode shard body and
+    any TPU flash decode kernel).
 
-    q: (B,1,Hq,hd); k_cache/v_cache: (B,S,Hkv,hd); mask: (B,S) bool.
-    Returns (B,1,Hq,hd)."""
+    q: (B,Tq,Hq,hd); k_cache/v_cache: (B,S,Hkv,hd); mask: (B,Tq,S) bool.
+    Returns (B,Tq,Hq,hd).  Tq=1 is the decode step; Tq>1 is the unified
+    chunked-prefill / mixed-batch step (attn_block_step)."""
     hkv = k_cache.shape[2]
     g = cfg.num_heads // hkv
     scale = cfg.head_dim ** -0.5
-    qg = q.reshape(q.shape[0], 1, hkv, g, q.shape[-1])       # (B,1,Hkv,G,hd)
+    tq = q.shape[1]
+    qg = q.reshape(q.shape[0], tq, hkv, g, q.shape[-1])      # (B,Tq,Hkv,G,hd)
     logits = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
                         preferred_element_type=jnp.float32) * scale
-    mask5 = mask[:, None, None, None, :]                     # (B,1,1,1,S)
+    mask5 = mask[:, None, None, :, :]                        # (B,1,1,Tq,S)
     logits = jnp.where(mask5, logits, NEG_INF)
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     out = jnp.einsum("bhgqs,bshd->bhgqd", probs.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     b, _, _, _, hd = out.shape
-    out = out.astype(q.dtype).transpose(0, 3, 1, 2, 4)       # (B,1,Hkv,G,hd)
-    return out.reshape(b, 1, hkv * g, hd)
+    out = out.astype(q.dtype).transpose(0, 3, 1, 2, 4)       # (B,Tq,Hkv,G,hd)
+    return out.reshape(b, tq, hkv * g, hd)
+
+
+def _attend_grouped_decode(cfg, q: Array, k_cache: Array, v_cache: Array,
+                           mask: Array) -> Array:
+    """Single-step (Tq=1) grouped-GQA attention; mask: (B,S) bool."""
+    return _attend_grouped_block(cfg, q, k_cache, v_cache, mask[:, None, :])
 
 
 def attn_decode_step(p: dict, cfg, cache: dict, x: Array, lengths: Array,
@@ -360,6 +368,124 @@ def attn_decode_step(p: dict, cfg, cache: dict, x: Array, lengths: Array,
     out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
     out = jnp.einsum("bse,ed->bsd", out, p["wo"])
     return out, new_cache
+
+
+def _update_cache_block(cache_kv: Array, new_kv: Array, lengths: Array,
+                        seg_lens: Array, ring: bool) -> Array:
+    """Insert new_kv (B, T, Hkv, hd) at per-row offsets ``lengths`` (B,),
+    keeping only each row's first ``seg_lens[b]`` tokens — the block
+    generalization of ``_update_cache``'s single-slot write.
+
+    Non-ring path: a per-row read-modify-write of one T-sized block via
+    ``dynamic_slice`` + ``dynamic_update_slice`` (donation-friendly: the
+    only cache traffic is the T-block, never a full-cache copy).  The slice
+    start is clamped to ``S - T`` so rows whose offset sits near the cache
+    end never smear earlier slots; the in-block merge keeps the original
+    value everywhere the (clamped) window does not hold a valid new token.
+
+    Ring path (cache_len == window): slots wrap, so a masked per-token
+    scatter writes position p at slot p % S and drops invalid tokens via an
+    out-of-bounds sentinel index."""
+    b, t = new_kv.shape[:2]
+    cache_len = cache_kv.shape[1]
+    if t > cache_len:
+        raise ValueError(f"block length {t} exceeds cache length {cache_len}")
+    new_kv = new_kv.astype(cache_kv.dtype)
+    if ring:
+        slots = lengths[:, None] + jnp.arange(t)[None, :]
+        valid = jnp.arange(t)[None, :] < seg_lens[:, None]
+        slots = jnp.where(valid, slots % cache_len, cache_len)  # OOB -> drop
+        return jax.vmap(lambda c, n, s: c.at[s].set(n, mode="drop"))(
+            cache_kv, new_kv, slots)
+
+    def upd(c_row, n_row, off, sl):
+        s0 = jnp.clip(off, 0, cache_len - t)
+        old = jax.lax.dynamic_slice_in_dim(c_row, s0, t, axis=0)
+        ci = s0 + jnp.arange(t) - off            # index into the new block
+        ok = (ci >= 0) & (ci < sl)
+        new = jnp.take(n_row, jnp.clip(ci, 0, t - 1), axis=0)
+        blk = jnp.where(ok.reshape((t,) + (1,) * (n_row.ndim - 1)), new, old)
+        return jax.lax.dynamic_update_slice_in_dim(c_row, blk, s0, axis=0)
+
+    return jax.vmap(upd)(cache_kv, new_kv, lengths, seg_lens)
+
+
+def block_slot_positions(lengths: Array, seg_lens: Array, cache_len: int,
+                         ring: bool) -> Array:
+    """Absolute position held by each cache slot after a block write.
+
+    Non-ring caches store position p at slot p, so the map is just the slot
+    index.  Ring caches store p at slot p % S; under the write invariant the
+    slot holds the *largest* position <= hi = lengths + seg_lens - 1 congruent
+    to it, and slots whose implied position is negative were never written.
+    Returns (B, S) int32 (negative = slot not yet written)."""
+    sidx = jnp.arange(cache_len, dtype=jnp.int32)[None, :]
+    if not ring:
+        return jnp.broadcast_to(sidx, (lengths.shape[0], cache_len))
+    hi = (lengths + seg_lens - 1)[:, None]
+    return hi - ((hi - sidx) % cache_len)
+
+
+def attn_block_step(p: dict, cfg, cache: dict, x: Array, positions: Array,
+                    lengths: Array, seg_lens: Array, window: int | None,
+                    mrope_positions: Array | None = None,
+                    mesh=None) -> tuple[Array, dict]:
+    """Unified length-agnostic cached attention over a (B, T) token block.
+
+    Each row b holds ``seg_lens[b]`` valid tokens (0..T) that continue its
+    sequence at cache offset ``lengths[b]`` — T=1 with seg_lens=1 is a
+    decode step, seg_lens=T at lengths=0 is whole-prompt prefill, and any
+    mix of per-row values is a chunked-prefill / mixed prefill+decode batch
+    (docs/DESIGN.md §6).  Position-offset causal masking makes token t of
+    row b (absolute position ``positions[b, t]``) attend exactly the cache
+    slots holding positions <= its own (and > pos - window under SWA);
+    invalid tokens (t >= seg_lens[b]) get a fully-masked row, a dropped
+    cache write, and garbage output the caller must ignore (the MoE layer
+    dead-routes them via token_mask).
+
+    x: (B, T, D); positions: (B, T) int32 absolute; lengths/seg_lens: (B,).
+    Returns ((B, T, D), cache')."""
+    b, t, _ = x.shape
+    cache_len = cache["k"].shape[1]
+    ring = window is not None and cache_len == window
+    if ring and t > 1:
+        # a multi-token chunk written into a wrapped ring BEFORE attention
+        # overwrites slots whose old positions are still inside earlier
+        # chunk tokens' windows — those keys would be silently lost.  Ring
+        # caches therefore only take width-1 blocks (== the decode step);
+        # the engine falls back to the reference path for ring-cache archs.
+        raise ValueError(
+            f"ring KV cache (window == cache_len == {cache_len}) supports "
+            f"only width-1 blocks, got T={t}")
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, mrope_positions,
+                                   mesh)
+    if kv_quantized(cfg):
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_cache = {
+            kk: _update_cache_block(cache[kk], nn, lengths, seg_lens, ring)
+            for kk, nn in (("k", kq), ("v", vq),
+                           ("k_scale", ks), ("v_scale", vs))
+        }
+        k_cache = dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v_cache = dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        k_cache = _update_cache_block(cache["k"], k_new, lengths, seg_lens,
+                                      ring)
+        v_cache = _update_cache_block(cache["v"], v_new, lengths, seg_lens,
+                                      ring)
+        new_cache = {"k": k_cache, "v": v_cache}
+
+    slot_pos = block_slot_positions(lengths, seg_lens, cache_len, ring)
+    valid = jnp.arange(t)[None, :] < seg_lens[:, None]
+    qp = jnp.where(valid, positions, -1)                     # (B, T)
+    mask = (slot_pos[:, None, :] >= 0) \
+        & (slot_pos[:, None, :] <= qp[:, :, None])           # (B, T, S)
+    if window is not None:
+        mask = mask & (slot_pos[:, None, :] > qp[:, :, None] - window)
+    out = _attend_grouped_block(cfg, q, k_cache, v_cache, mask)
+    out = out.reshape(b, t, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]), new_cache
 
 
 def attn_decode_step_cp(p: dict, cfg, cache: dict, x: Array, lengths: Array,

@@ -65,6 +65,7 @@ class Model:
     init_cache: Callable
     prefill_routed: Callable
     decode_step_routed: Callable
+    forward_routed: Callable
 
 
 def _embed_inputs(cfg, params, batch) -> tuple[Array, Array, Array | None, Array]:
@@ -203,8 +204,55 @@ def build_model(cfg) -> Model:
                                               context_len)
         return logits, cache
 
+    # ---- unified token-budget forward -----------------------------------
+    def forward_routed(params, batch, cache, mesh=None, context_len=None):
+        """Length-agnostic unified step: one (B, T) token block at arbitrary
+        per-row cache offsets (docs/DESIGN.md §6).
+
+        batch: {"tokens": (B, T) int32, "lengths": (B,) int32 cache offsets,
+        "seg_lens": (B,) int32 valid-token counts, optional "token_mask"}.
+        Row b appends its first seg_lens[b] tokens at positions
+        lengths[b]..lengths[b]+seg_lens[b]-1; T=1/seg_lens=1 is a decode
+        step, seg_lens=T at lengths=0 is whole-prompt prefill, and per-row
+        mixes are chunked-prefill / mixed prefill+decode batches.  The
+        prefill/decode twins above remain as the two-program reference.
+
+        Returns (logits (B, V) at each row's LAST VALID position, cache',
+        routing (L, B*T, K) int32 | None).  The cache is updated via
+        dynamic-slice writes on the layer-scan carry, so donating callers
+        keep the zero-copy hot loop; ``lengths``/``seg_lens`` stay
+        undonated host snapshots (same race rule as decode)."""
+        if cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"forward_routed supports token-input attention families, "
+                f"not {cfg.family!r}")
+        tokens = batch["tokens"]
+        lengths = batch["lengths"]
+        seg_lens = batch["seg_lens"]
+        b, t = tokens.shape
+        tok = jnp.clip(tokens, 0, cfg.vocab_size - 1)
+        x = jnp.take(params["embed"], tok, axis=0).astype(dt)
+        positions = lengths[:, None] + jnp.arange(t, dtype=jnp.int32)[None]
+        if cfg.positional == "sinusoidal":
+            x = x + sinusoidal_embedding(positions, cfg.d_model).astype(dt)
+        token_mask = batch.get("token_mask")
+        if token_mask is None:
+            token_mask = jnp.arange(t)[None] < seg_lens[:, None]
+        cache_len = _attn_cache_len(cfg, cache)
+        window = (transformer.effective_window(cfg, context_len or cache_len)
+                  if cache_len is not None else cfg.sliding_window)
+        x, cache, routing = transformer.unified_stack(
+            cfg, mesh, params["blocks"], x, positions, lengths, seg_lens,
+            cache, window, token_mask=token_mask)
+        sel = jnp.clip(seg_lens - 1, 0, t - 1)
+        x_sel = jnp.take_along_axis(x, sel[:, None, None], axis=1)  # (B,1,D)
+        x_sel = layers.norm_apply(cfg.norm, params["final_norm"], x_sel)
+        logits = _lm_head(cfg, params, x_sel)
+        return logits[:, 0], cache, routing
+
     return Model(cfg, init, forward, loss, prefill, decode_step,
-                 cache_specs, init_cache, prefill_routed, decode_step_routed)
+                 cache_specs, init_cache, prefill_routed, decode_step_routed,
+                 forward_routed)
 
 
 def _attn_cache_len(cfg, cache) -> int | None:

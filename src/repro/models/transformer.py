@@ -142,15 +142,26 @@ def init_blocks(cfg, key) -> dict:
 # ---------------------------------------------------------------------------
 
 def _attn_mlp_block(cfg, mesh, layer_p, x, positions, window, mrope_pos,
-                    cache_l=None, decode=False, token_mask=None):
+                    cache_l=None, decode=False, token_mask=None,
+                    block_lens=None):
     """Generic attention(+cache) + {mlp | moe} block.
 
     Returns (x, new_cache, aux, routed) where ``routed`` is the MoE layer's
     per-token routing decision ((B*S, K) int32, see expert_parallel.moe_layer)
     or None for non-MoE families.  ``token_mask`` (B, S) bool marks tokens
-    that may consume expert capacity (batched prefill masks garbage rows)."""
+    that may consume expert capacity (batched prefill masks garbage rows).
+
+    ``block_lens`` = (lengths, seg_lens) selects the unified token-block
+    path (attention.attn_block_step): an arbitrary (B, T) chunk appended at
+    per-row cache offsets — chunked prefill and mixed prefill/decode batches
+    share this one body (docs/DESIGN.md §6)."""
     h = layers.norm_apply(cfg.norm, layer_p["ln1"], x)
-    if decode:
+    if block_lens is not None:
+        lengths, seg_lens = block_lens
+        h, new_cache = attention.attn_block_step(
+            layer_p["attn"], cfg, cache_l, h, positions, lengths, seg_lens,
+            window, mrope_pos, mesh=mesh)
+    elif decode:
         if attention.use_cp_decode(cfg, mesh, cache_l["k"].shape[1]):
             h, new_cache = attention.attn_decode_step_cp(
                 layer_p["attn"], cfg, cache_l, h, positions, window, mesh,
@@ -413,6 +424,40 @@ def decode_stack(cfg, mesh, blocks, x, lengths, cache, window,
                                              decode=True,
                                              token_mask=token_mask)
         if routed is None:           # dense/vlm/audio: no capture
+            routed = jnp.zeros((), jnp.int32)
+        return out, nc, routed
+
+    x, new_cache, routing = _scan_stack_with_cache(cfg, blocks, x, cache,
+                                                   layer_body)
+    if cfg.family != "moe":
+        routing = None
+    return x, new_cache, routing
+
+
+def unified_stack(cfg, mesh, blocks, x, positions, lengths, seg_lens, cache,
+                  window, mrope_pos=None, token_mask=None):
+    """Length-agnostic token-block forward through all layers — the ONE
+    layer body behind chunked prefill, decode, and mixed prefill/decode
+    batches (the prefill/decode twin stacks remain as the
+    ``unified_step=False`` reference path).
+
+    x: (B, T, D); positions: (B, T) absolute; lengths/seg_lens: (B,) cache
+    offsets and per-row valid-token counts.  Returns (x, new_cache,
+    routing) with routing (L, B*T, K) int32 for the moe family (invalid
+    tokens read the E_pad sentinel), else None.  The cache rides the layer
+    scan as a carry (``_scan_stack_with_cache``), so a donating caller
+    keeps the zero-copy hot loop."""
+    if cfg.family not in ("dense", "moe", "vlm", "audio"):
+        raise NotImplementedError(
+            f"unified_stack supports attention-cache families, not "
+            f"{cfg.family!r} (use the prefill/decode reference path)")
+
+    def layer_body(xx, lp, cl):
+        out, nc, _, routed = _attn_mlp_block(cfg, mesh, lp, xx, positions,
+                                             window, mrope_pos, cl,
+                                             token_mask=token_mask,
+                                             block_lens=(lengths, seg_lens))
+        if routed is None:
             routed = jnp.zeros((), jnp.int32)
         return out, nc, routed
 

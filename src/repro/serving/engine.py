@@ -48,8 +48,28 @@ Other paper artifacts are unchanged: ``standby`` reproduces the keep-warm
 summing touch (§4.2) and the tracker's LRU structure is the faithful L_R
 host half.
 
-Static-shape serving: requests are right-padded to the slot length; the
-scheduler packs arrivals into fixed decode slots (continuous batching).
+  * **Unified token-budget step** (``EngineConfig.unified_step``, default
+    on) — prefill and decode are ONE jit program
+    (``Model.forward_routed``): every iteration packs the active decode
+    rows *and* up to ``token_budget`` pending prefill-chunk tokens into a
+    single (max_batch, chunk_len) block at per-row cache offsets.  Long
+    prompts stream through the cache ``chunk_len`` tokens per iteration
+    (no padding to ``prefill_len``, no truncation — prompts up to
+    ``max_cache``), and admission never stalls in-flight decode rows: a
+    decode slot advances one token every iteration regardless of how much
+    prefill work is queued.  ``unified_step=False`` restores the
+    two-program reference engine (padded whole-prompt prefill + one-token
+    decode) for A/B token-equality and perf comparison.
+  * **Per-request sampling** — ``Request.temperature`` / ``top_k`` are
+    applied inside the jit step (greedy argmax when temperature=0, the
+    default; otherwise per-row top-k Gumbel sampling with an RNG folded on
+    (engine step, slot)).  Token-equality gates always run at
+    temperature=0.
+
+Static-shape serving: the reference path right-pads requests to the slot
+length; the unified path streams chunks through a fixed (max_batch,
+chunk_len) block.  The scheduler packs arrivals into fixed decode slots
+(continuous batching).
 
 Batch-capacity semantics (``moe_strategy="dispatch"``): per-expert dispatch
 capacity scales with the whole admitted batch, so requests batched together
@@ -83,19 +103,43 @@ class Request:
     uid: int
     prompt: np.ndarray            # (prompt_len,) int32
     max_new_tokens: int = 32
+    # per-request sampling params (greedy when temperature == 0)
+    temperature: float = 0.0
+    top_k: int = 0                # 0 = no top-k cut (full vocab)
     # filled by the engine
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    submit_s: float = 0.0         # wall clock at submit()
+    first_token_s: float | None = None  # wall clock when token 1 harvested
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_batch: int = 8            # decode slots
-    prefill_len: int = 128        # prompts padded/truncated to this
+    prefill_len: int = 128        # reference mode: prompts padded to this
     max_cache: int = 256          # KV/state cache length
     track_experts: bool = True
     batched_prefill: bool = True  # False: legacy per-request prefill
     async_steps: bool = True      # False: block_until_ready every step
+    # Unified token-budget forward pass (the production path): prefill and
+    # decode share ONE jit program (Model.forward_routed); each iteration
+    # packs active decode rows plus pending prefill chunks into a single
+    # (max_batch, chunk_len) block at per-row cache offsets.  Prompts of
+    # any length up to max_cache stream through the cache chunk_len tokens
+    # per iteration — no prefill_len padding/truncation, and admission
+    # never stalls decode.  False restores the two-program reference
+    # engine (whole-prompt padded prefill + one-token decode) for A/B
+    # token-equality and perf comparison.  Families without a unified
+    # forward (ssm/hybrid/vlm/audio) silently fall back to the reference
+    # path.
+    unified_step: bool = True
+    chunk_len: int = 32           # unified block width / prefill chunk size
+    # Per-iteration cap on scheduled prefill tokens (0 = unlimited).
+    # Decode rows are exempt: they always advance.  The budget throttles
+    # how much prefill work shares an iteration with decode, bounding the
+    # per-iteration latency a decode token can see.
+    token_budget: int = 0
+    sample_seed: int = 0          # RNG seed for stochastic decode
     # Donate the cache operand of every jit in the hot loop (the JAX
     # analogue of the paper's C1 pre-allocated buffers): the model updates
     # the cache with dynamic_update_slice on a scan *carry*
@@ -117,12 +161,18 @@ class _Pending:
     (B,) last-token vector; ``routing`` the (L, T, K) device capture (None
     for dense archs / disabled tracking).  ``routing_batch`` is the batch
     size of the dispatched call (1 for the legacy batch-1 prefill, whose
-    capture row is always 0)."""
-    kind: str                     # "prefill" | "decode"
+    capture row is always 0).  ``obs_rows`` lists the batch rows whose
+    routing capture should feed the tracker (unified mixed batches observe
+    mid-prefill rows that sample no token); None = the rows of ``rows``.
+    ``stalled`` marks reference-mode prefill dispatched while decode rows
+    were in flight (its device time is decode-stall time)."""
+    kind: str                     # "prefill" | "decode" | "mixed"
     rows: tuple                   # ((row_in_routing, slot, Request), ...)
     tok: Any
     routing: Any
     routing_batch: int
+    obs_rows: tuple | None = None
+    stalled: bool = False
 
 
 class ServingEngine:
@@ -156,25 +206,113 @@ class ServingEngine:
         self.budgets = np.zeros((b,), np.int32)
         self.last_tok = jnp.zeros((b,), jnp.int32)
         self._pending: list[_Pending] = []
+        # unified-step scheduler state: per-slot prefill progress (prompt
+        # tokens already streamed into the cache) and sampling params
+        if self.ecfg.chunk_len < 1 or self.ecfg.token_budget < 0:
+            raise ValueError(
+                f"chunk_len must be >= 1 and token_budget >= 0, got "
+                f"chunk_len={self.ecfg.chunk_len} "
+                f"token_budget={self.ecfg.token_budget}")
+        # the unified block step needs a token-input attention family and a
+        # LINEAR cache: a ring cache (sliding window == cache length) only
+        # takes width-1 writes (attention.attn_block_step), so sliding-
+        # window archs keep the two-program reference path
+        from repro.models.transformer import effective_window
+        win = (effective_window(cfg_model, self.ecfg.max_cache)
+               if cfg_model.family in ("dense", "moe") else None)
+        # transformer.stack_cache_spec clips the cache to the window, so
+        # any window <= max_cache means the allocated cache is a ring
+        ring = win is not None and win <= self.ecfg.max_cache
+        self.unified = (self.ecfg.unified_step and not ring
+                        and cfg_model.family in ("dense", "moe"))
+        # block width: a chunk can never exceed the cache it streams into
+        self.chunk_len = min(self.ecfg.chunk_len, self.ecfg.max_cache)
+        self.prefill_pos = np.zeros((b,), np.int64)
+        self.temps = np.zeros((b,), np.float32)
+        self.topks = np.zeros((b,), np.int32)
+        self._sample_key = jax.random.PRNGKey(self.ecfg.sample_seed)
+        self._step_idx = 0
+        self._admit_stalled = False
         # cache is argument 1 of every jit body; self.cache is rebound to the
         # output before the next dispatch, so donating it is always safe.
         donate = (1,) if self.ecfg.donate_buffers else ()
+        # the trailing ``sampling`` flag is STATIC: greedy-only workloads
+        # trace a pure-argmax program; the first stochastic submit() flips
+        # the flag and retraces once with the Gumbel/top-k sampler inlined
         self._jit_prefill_batch = jax.jit(self._prefill_batch,
-                                          donate_argnums=donate)
+                                          donate_argnums=donate,
+                                          static_argnums=(8,))
         self._jit_prefill_one = jax.jit(self._prefill_one,
-                                        donate_argnums=donate)
-        self._jit_decode = jax.jit(self._decode, donate_argnums=donate)
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
-                      "decode_tokens": 0, "prefill_s": 0.0, "decode_s": 0.0,
-                      "harvest_s": 0.0, "harvests": 0}
+                                        donate_argnums=donate,
+                                        static_argnums=(8,))
+        self._jit_decode = jax.jit(self._decode, donate_argnums=donate,
+                                   static_argnums=(8,))
+        self._jit_unified = jax.jit(self._unified, donate_argnums=donate,
+                                    static_argnums=(11,))
+        self._sampling = False
+        self.stats = {"prefill_tokens": 0, "prefill_pad_tokens": 0,
+                      "decode_steps": 0, "decode_tokens": 0,
+                      "prefill_s": 0.0, "decode_s": 0.0, "mixed_s": 0.0,
+                      "stall_s": 0.0, "harvest_s": 0.0, "harvests": 0}
 
     # -- jit bodies ---------------------------------------------------------
 
-    def _greedy_next(self, logits: Array) -> Array:
-        return jnp.argmax(logits[:, :self.cfg.vocab_size],
-                          axis=-1).astype(jnp.int32)
+    def _sample_next(self, logits: Array, temps: Array, topks: Array,
+                     step_idx: Array, sampling: bool) -> Array:
+        """Per-row sampling inside the jit step: greedy argmax where
+        temperature == 0 (the default, keeping every token-equality gate
+        exact), otherwise temperature-scaled top-k Gumbel sampling with an
+        RNG folded on (engine step, slot) so replays with the same
+        ``sample_seed`` are deterministic.
 
-    def _prefill_batch(self, params, cache, tokens, admit_mask, last_tok):
+        ``sampling`` is a TRACE-TIME flag (static jit argument): it stays
+        False until the first stochastic request is submitted, so purely
+        greedy workloads never trace the (B, V) sort / Gumbel draws into
+        the hot loop — the all-greedy program is pure argmax.
+
+        logits: (B, V_padded) fp32; temps: (B,) fp32; topks: (B,) int32
+        (0 = full vocab); step_idx: () int32."""
+        v = self.cfg.vocab_size
+        logits = logits[:, :v].astype(jnp.float32)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not sampling:
+            return greedy
+        b = logits.shape[0]
+        key = jax.random.fold_in(self._sample_key, step_idx)
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(b))
+        gum = jax.vmap(lambda k: jax.random.gumbel(k, (v,), jnp.float32))(keys)
+        scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+        kth = jnp.take_along_axis(
+            -jnp.sort(-scaled, axis=-1),                  # descending sort
+            (jnp.clip(topks, 1, v) - 1)[:, None], axis=-1)
+        keep = (scaled >= kth) | (topks[:, None] <= 0)
+        samp = jnp.argmax(jnp.where(keep, scaled, -1e30) + gum,
+                          axis=-1).astype(jnp.int32)
+        return jnp.where(temps > 0, samp, greedy)
+
+    def _unified(self, params, cache, tokens, last_tok, lengths, seg_lens,
+                 is_decode, sample_mask, temps, topks, step_idx, sampling):
+        """ONE jit program for prefill chunks, decode rows, and any mix.
+
+        tokens: (B, chunk_len) host-scheduled block — decode rows take their
+        input token from device-resident ``last_tok`` instead (column 0), so
+        the decode feedback loop never syncs to the host.  ``seg_lens``
+        gives each row's valid-token count at cache offset ``lengths``;
+        ``sample_mask`` marks rows whose last valid logit becomes a
+        generated token (decode rows and final prefill chunks — mid-prompt
+        chunks keep ``last_tok`` untouched).  Returns (last_tok', cache',
+        routing (L, B*chunk_len, K))."""
+        tok0 = jnp.where(is_decode, last_tok, tokens[:, 0])
+        tokens = jnp.concatenate([tok0[:, None], tokens[:, 1:]], axis=1)
+        logits, cache, routing = self.model.forward_routed(
+            params, {"tokens": tokens, "lengths": lengths,
+                     "seg_lens": seg_lens}, cache, self.mesh)
+        nxt = self._sample_next(logits, temps, topks, step_idx, sampling)
+        last_tok = jnp.where(sample_mask, nxt, last_tok)
+        return last_tok, cache, routing
+
+    def _prefill_batch(self, params, cache, tokens, admit_mask, last_tok,
+                       temps, topks, step_idx, sampling):
         """Admit up to max_batch requests in ONE call.
 
         tokens: (B, prefill_len) — zeros on non-admitted rows;
@@ -186,7 +324,8 @@ class ServingEngine:
         tmask = jnp.broadcast_to(admit_mask[:, None], tokens.shape)
         logits, new_cache, routing = self.model.prefill_routed(
             params, {"tokens": tokens, "token_mask": tmask}, cache, self.mesh)
-        nxt = self._greedy_next(logits[:, -1])
+        nxt = self._sample_next(logits[:, -1], temps, topks, step_idx,
+                                sampling)
 
         def merge(old, new):
             if old.ndim < 2:      # scalar bookkeeping leaves, if any
@@ -198,7 +337,8 @@ class ServingEngine:
         last_tok = jnp.where(admit_mask, nxt, last_tok)
         return last_tok, cache, routing
 
-    def _prefill_one(self, params, cache, tokens, slot, last_tok):
+    def _prefill_one(self, params, cache, tokens, slot, last_tok,
+                     temps, topks, step_idx, sampling):
         """Legacy reference path: batch-1 prefill scattered into ``slot``.
 
         The batch-1 working cache is *sliced* out of the full cache rather
@@ -217,39 +357,88 @@ class ServingEngine:
         cache = jax.tree.map(
             lambda full, one: jax.lax.dynamic_update_index_in_dim(
                 full, one[:, 0], slot, axis=1), cache, one_cache)
-        nxt = self._greedy_next(logits[:, -1])  # (1,)
+        nxt = self._sample_next(logits[:, -1], jnp.take(temps, slot)[None],
+                                jnp.take(topks, slot)[None], step_idx,
+                                sampling)  # (1,)
         last_tok = jax.lax.dynamic_update_index_in_dim(
             last_tok, nxt[0], slot, axis=0)
         return last_tok, cache, routing
 
-    def _decode(self, params, cache, last_tok, lengths, active_mask):
+    def _decode(self, params, cache, last_tok, lengths, active_mask,
+                temps, topks, step_idx, sampling):
         logits, cache, routing = self.model.decode_step_routed(
             params, cache, {"tokens": last_tok[:, None], "lengths": lengths,
                             "token_mask": active_mask[:, None]},
             self.mesh)
-        nxt = self._greedy_next(logits[:, -1])
+        nxt = self._sample_next(logits[:, -1], temps, topks, step_idx,
+                                sampling)
         last_tok = jnp.where(active_mask, nxt, last_tok)
         return last_tok, cache, routing
 
     # -- public API ---------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               temperature: float = 0.0, top_k: int = 0) -> int:
+        """Queue a request.  ``temperature``/``top_k`` select per-request
+        sampling inside the jit step (greedy when temperature=0).
+
+        Prompt-length contract: the unified engine streams prompts through
+        the cache in chunks, so anything up to ``max_cache`` is served
+        without truncation; the reference (``unified_step=False``) path
+        pads whole prompts to ``prefill_len`` and REJECTS longer ones
+        instead of silently dropping the prefix (the seed engine's
+        behaviour)."""
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) == 0:
+            # a zero-length prompt has no defined context: the unified
+            # scheduler would classify it as a decode row seeded from the
+            # slot's STALE last_tok (the previous occupant's final token)
+            raise ValueError("empty prompt")
+        limit = (self.ecfg.max_cache if self.unified
+                 else self.ecfg.prefill_len)
+        if len(prompt) > limit:
+            mode = "unified" if self.unified else "reference"
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds the {mode} "
+                f"engine's limit of {limit} "
+                f"({'max_cache' if self.unified else 'prefill_len'}); "
+                f"refusing to silently truncate")
+        # decode step i writes generated token i at slot context+i; past
+        # max_cache those writes clamp/drop and later tokens are generated
+        # against a context missing their predecessors — reject instead of
+        # silently corrupting.  The reference path always decodes from
+        # offset prefill_len (the padded program), the unified path from
+        # the real prompt length.
+        context = len(prompt) if self.unified else self.ecfg.prefill_len
+        if context + max_new_tokens - 1 > self.ecfg.max_cache:
+            raise ValueError(
+                f"context of {context} tokens + {max_new_tokens} new "
+                f"tokens does not fit the {self.ecfg.max_cache}-slot cache; "
+                f"lower max_new_tokens or raise max_cache")
         self._uid += 1
-        req = Request(self._uid, np.asarray(prompt, np.int32), max_new_tokens)
+        if temperature > 0:
+            self._sampling = True    # one-time retrace with the sampler
+        req = Request(self._uid, prompt, max_new_tokens,
+                      temperature=float(temperature), top_k=int(top_k),
+                      submit_s=time.perf_counter())
         self.queue.append(req)
         self._all[req.uid] = req
         return self._uid
 
     def _pad_prompt(self, req: Request) -> np.ndarray:
-        p = req.prompt[-self.ecfg.prefill_len:]
+        assert len(req.prompt) <= self.ecfg.prefill_len  # enforced at submit
         pad = np.zeros((self.ecfg.prefill_len,), np.int32)
-        pad[:len(p)] = p
+        pad[:len(req.prompt)] = req.prompt
         return pad
 
     def _admit(self) -> None:
         free = [i for i, r in enumerate(self.slots) if r is None]
         if not free or not self.queue:
             return
+        # reference-mode stall: any in-flight decode slot sits idle for the
+        # whole separate prefill program (the unified path has no such
+        # window — decode rows ride every iteration)
+        self._admit_stalled = any(r is not None for r in self.slots)
         if self.ecfg.batched_prefill:
             self._admit_batched(free)
         else:
@@ -260,9 +449,14 @@ class ServingEngine:
             self.slots[slot] = req
             self.lengths[slot] = self.ecfg.prefill_len
             self.budgets[slot] = req.max_new_tokens - 1
-            self.stats["prefill_tokens"] += self.ecfg.prefill_len
+            # real prompt tokens vs the padding the fixed-length program
+            # recomputes anyway (satellite fix: tok/s counts real work)
+            self.stats["prefill_tokens"] += len(req.prompt)
+            self.stats["prefill_pad_tokens"] += (self.ecfg.prefill_len
+                                                 - len(req.prompt))
         self._pending.append(_Pending("prefill", tuple(rows), self.last_tok,
-                                      routing, routing_batch))
+                                      routing, routing_batch,
+                                      stalled=self._admit_stalled))
         if not self.ecfg.async_steps:
             self._harvest()
 
@@ -277,39 +471,70 @@ class ServingEngine:
             req = self.queue.popleft()
             tokens[slot] = self._pad_prompt(req)
             admit[slot] = True
+            self.temps[slot] = req.temperature
+            self.topks[slot] = req.top_k
             rows.append((slot, slot, req))
         t0 = time.perf_counter()
+        step_idx = self._next_step_idx()
         # tokens/admit are freshly built per call and never mutated after
         # dispatch (see the transfer note in step())
         self.last_tok, self.cache, routing = self._jit_prefill_batch(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(admit),
-            self.last_tok)
+            self.last_tok, jnp.asarray(self.temps.copy()),
+            jnp.asarray(self.topks.copy()), step_idx, self._sampling)
         if not self.ecfg.async_steps:
             self.last_tok.block_until_ready()
-        self.stats["prefill_s"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats["prefill_s"] += dt
+        if self._admit_stalled:
+            self.stats["stall_s"] += dt
         self._post_admit(rows, routing, self.ecfg.max_batch)
 
     def _admit_sequential(self, free: list[int]) -> None:
         for slot in free:
             if not self.queue:
                 break
+            # re-check per dispatch: request N's separate prefill program
+            # stalls the requests admitted earlier in this same round too
+            self._admit_stalled = any(r is not None for r in self.slots)
             req = self.queue.popleft()
             tokens = self._pad_prompt(req)[None]
+            self.temps[slot] = req.temperature
+            self.topks[slot] = req.top_k
             t0 = time.perf_counter()
+            step_idx = self._next_step_idx()
             self.last_tok, self.cache, routing = self._jit_prefill_one(
                 self.params, self.cache, jnp.asarray(tokens), slot,
-                self.last_tok)
+                self.last_tok, jnp.asarray(self.temps.copy()),
+                jnp.asarray(self.topks.copy()), step_idx, self._sampling)
             if not self.ecfg.async_steps:
                 self.last_tok.block_until_ready()
-            self.stats["prefill_s"] += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.stats["prefill_s"] += dt
+            if self._admit_stalled:
+                self.stats["stall_s"] += dt
             self._post_admit([(0, slot, req)], routing, 1)
 
+    def _next_step_idx(self) -> Any:
+        """Monotone per-dispatch counter feeding the sampling RNG fold
+        (handed to the jit as a 0-d device array so it traces once)."""
+        i = self._step_idx
+        self._step_idx += 1
+        return jnp.asarray(i, jnp.int32)
+
     def step(self) -> int:
-        """One engine iteration: admit + one decode step. Returns #active.
+        """One engine iteration.  Returns the number of rows that did work.
+
+        Unified mode: admit (state-only), then pack decode rows + prefill
+        chunks into ONE mixed-batch jit call (``_step_unified``).
+        Reference mode: admit (separate whole-prompt prefill programs,
+        stalling in-flight decodes) + one decode step.
 
         In async mode the device step is only *dispatched* here; tokens are
         appended to requests at the next harvest boundary (a request
         finishing, ``flush()``, or sync mode)."""
+        if self.unified:
+            return self._step_unified()
         self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
@@ -317,6 +542,7 @@ class ServingEngine:
         mask = np.zeros((self.ecfg.max_batch,), bool)
         mask[active] = True
         t0 = time.perf_counter()
+        step_idx = self._next_step_idx()
         # NB: self.lengths is handed to the device as a host-side SNAPSHOT
         # (.copy()) that nothing mutates afterwards.  The host→device
         # transfer is itself deferred on jaxlib 0.4.x CPU — even
@@ -327,7 +553,9 @@ class ServingEngine:
         # call and never mutated after dispatch, so they are safe as-is.
         self.last_tok, self.cache, routing = self._jit_decode(
             self.params, self.cache, self.last_tok,
-            jnp.asarray(self.lengths.copy()), jnp.asarray(mask))
+            jnp.asarray(self.lengths.copy()), jnp.asarray(mask),
+            jnp.asarray(self.temps.copy()), jnp.asarray(self.topks.copy()),
+            step_idx, self._sampling)
         if not self.ecfg.async_steps:
             self.last_tok.block_until_ready()
         self.stats["decode_s"] += time.perf_counter() - t0
@@ -349,6 +577,109 @@ class ServingEngine:
             self._harvest()
         return len(active)
 
+    # -- unified token-budget iteration -------------------------------------
+
+    def _step_unified(self) -> int:
+        """One token-budget iteration of the unified engine.
+
+        Admission only binds a request to a slot (no device work), so
+        arrivals NEVER stall in-flight decode rows.  The iteration then
+        schedules, in one (max_batch, chunk_len) block at per-row cache
+        offsets: (a) every decode row — one token each, exempt from the
+        budget; (b) pending prefill chunks, oldest slot first, until
+        ``token_budget`` (0 = unlimited) is exhausted.  A row whose chunk
+        completes its prompt samples its first generated token from that
+        chunk's last logit — the prefill→decode transition costs no extra
+        program."""
+        b, t = self.ecfg.max_batch, self.chunk_len
+        for i in range(b):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                self.lengths[i] = 0
+                self.prefill_pos[i] = 0
+                self.budgets[i] = req.max_new_tokens
+                self.temps[i] = req.temperature
+                self.topks[i] = req.top_k
+        tokens = np.zeros((b, t), np.int32)
+        seg = np.zeros((b,), np.int32)
+        is_dec = np.zeros((b,), bool)
+        sample = np.zeros((b,), bool)
+        budget = self.ecfg.token_budget or (b * t + b)   # 0 = unlimited
+        decode_rows, prefill_rows = [], []
+        for i, req in enumerate(self.slots):
+            if req is not None and self.prefill_pos[i] >= len(req.prompt):
+                seg[i] = 1
+                is_dec[i] = sample[i] = True
+                decode_rows.append(i)   # budget-exempt: decode never starves
+        for i, req in enumerate(self.slots):
+            if req is None or is_dec[i] or budget <= 0:
+                continue
+            pos = int(self.prefill_pos[i])
+            n = min(t, len(req.prompt) - pos, budget,
+                    self.ecfg.max_cache - int(self.lengths[i]))
+            if n <= 0:
+                continue
+            tokens[i, :n] = req.prompt[pos:pos + n]
+            seg[i] = n
+            budget -= n
+            sample[i] = pos + n == len(req.prompt)
+            prefill_rows.append(i)
+        if not decode_rows and not prefill_rows:
+            return 0
+        # decode-only iterations shrink the block to width 1: the unified
+        # program is length-agnostic, so the same jit body retraces once at
+        # (B, 1) and the steady-state decode iteration costs exactly a
+        # decode step — never chunk_len columns of dead compute
+        if not prefill_rows:
+            tokens = tokens[:, :1]
+        t0 = time.perf_counter()
+        step_idx = self._next_step_idx()
+        # lengths/temps/topks snapshots: same deferred-transfer race rule
+        # as the reference decode path (see step())
+        self.last_tok, self.cache, routing = self._jit_unified(
+            self.params, self.cache, jnp.asarray(tokens), self.last_tok,
+            jnp.asarray(self.lengths.copy()), jnp.asarray(seg),
+            jnp.asarray(is_dec), jnp.asarray(sample),
+            jnp.asarray(self.temps.copy()), jnp.asarray(self.topks.copy()),
+            step_idx, self._sampling)
+        if not self.ecfg.async_steps:
+            self.last_tok.block_until_ready()
+        dt = time.perf_counter() - t0
+        kind = ("decode" if not prefill_rows
+                else "prefill" if not decode_rows else "mixed")
+        self.stats[{"decode": "decode_s", "prefill": "prefill_s",
+                    "mixed": "mixed_s"}[kind]] += dt
+        rows = []
+        finishing = False
+        for i in decode_rows:
+            self.lengths[i] = min(self.lengths[i] + 1, self.ecfg.max_cache)
+            self.stats["decode_tokens"] += 1
+            self.budgets[i] -= 1
+            rows.append((i, i, self.slots[i]))
+            if self.budgets[i] <= 0:
+                self.slots[i] = None
+                finishing = True
+        if decode_rows:
+            self.stats["decode_steps"] += 1
+        for i in prefill_rows:
+            n = int(seg[i])
+            self.lengths[i] += n
+            self.prefill_pos[i] += n
+            self.stats["prefill_tokens"] += n
+            if sample[i]:                 # prompt complete: token 1 sampled
+                rows.append((i, i, self.slots[i]))
+                self.budgets[i] -= 1
+                if self.budgets[i] <= 0:
+                    self.slots[i] = None
+                    finishing = True
+        self._pending.append(_Pending(
+            kind, tuple(rows), self.last_tok, routing, b,
+            obs_rows=tuple(i for i in range(b) if seg[i])))
+        if finishing or not self.ecfg.async_steps:
+            self._harvest()
+        return len(decode_rows) + len(prefill_rows)
+
     # -- harvest: the only device sync in the loop --------------------------
 
     def _harvest(self) -> None:
@@ -366,10 +697,15 @@ class ServingEngine:
             tok, routing = jax.device_get((rec.tok, rec.routing))
             dt = time.perf_counter() - t0
             self.stats["harvest_s"] += dt
-            self.stats["prefill_s" if rec.kind == "prefill" else
-                       "decode_s"] += dt
+            self.stats[{"prefill": "prefill_s", "decode": "decode_s",
+                        "mixed": "mixed_s"}[rec.kind]] += dt
+            if rec.stalled:
+                self.stats["stall_s"] += dt
+            now = time.perf_counter()
             for _, slot, req in rec.rows:
                 req.generated.append(int(tok[slot]))
+                if req.first_token_s is None:
+                    req.first_token_s = now
                 if len(req.generated) >= req.max_new_tokens:
                     req.done = True
             self._observe_routing(rec, routing)
@@ -378,11 +714,16 @@ class ServingEngine:
         """Feed the tracker from the device capture (host does NO routing)."""
         if self.tracker is None or routing is None:
             return
-        # prefill: (L, B*S, K) -> (L, B, S*K); decode: (L, B, K) unchanged
+        # prefill/unified: (L, B*S, K) -> (L, B, S*K); decode: (L, B, K)
         per_row = routing.reshape(routing.shape[0], rec.routing_batch, -1)
-        row_ids = [row for row, _, _ in rec.rows]
+        row_ids = (list(rec.obs_rows) if rec.obs_rows is not None
+                   else [row for row, _, _ in rec.rows])
         for layer in range(self.cfg.num_layers):
-            self.tracker.observe(layer, per_row[layer, row_ids])
+            ids = per_row[layer, row_ids]
+            # unified blocks dead-route invalid tokens to the E_pad
+            # sentinel; those entries are scheduling padding, not executed
+            # experts — drop them before they reach the tracker
+            self.tracker.observe(layer, ids[ids < self.cfg.num_experts])
         self.tracker.tick()
 
     def flush(self) -> None:
@@ -427,13 +768,44 @@ class ServingEngine:
         return self.tracker.mean_executed_per_node(n_nodes)
 
     def throughput(self) -> dict:
-        """Per-phase tok/s.  ``prefill_s``/``decode_s`` hold dispatch time
-        plus each phase's harvest wait (see _harvest), so the split is
-        meaningful in async mode too; ``total`` is the combined rate."""
+        """Per-phase tok/s.  ``prefill_s``/``decode_s``/``mixed_s`` hold
+        dispatch time plus each phase's harvest wait (see _harvest), so the
+        split is meaningful in async mode too; ``total`` is the combined
+        rate over all three buckets (unified iterations that mix prefill
+        chunks with decode rows land in ``mixed_s``).
+
+        ``prefill_tokens`` counts REAL prompt tokens only;
+        ``prefill_padding_overhead`` is the fraction of prefill positions
+        the reference path spent recomputing padding (0 in unified mode —
+        the satellite fix for the seed's inflated prefill tok/s).
+        ``decode_stall_s`` is reference-mode device time during which
+        in-flight decode rows sat idle behind a separate prefill program
+        (0 by construction in unified mode)."""
         s = self.stats
+        work_s = s["prefill_s"] + s["decode_s"] + s["mixed_s"]
+        pad = s["prefill_pad_tokens"]
         return {
-            "prefill_tok_per_s": s["prefill_tokens"] / max(s["prefill_s"], 1e-9),
-            "decode_tok_per_s": s["decode_tokens"] / max(s["decode_s"], 1e-9),
+            "prefill_tok_per_s": s["prefill_tokens"] / max(s["prefill_s"]
+                                                           + s["mixed_s"], 1e-9),
+            "decode_tok_per_s": s["decode_tokens"] / max(s["decode_s"]
+                                                         + s["mixed_s"], 1e-9),
             "total_tok_per_s": (s["prefill_tokens"] + s["decode_tokens"])
-                               / max(s["prefill_s"] + s["decode_s"], 1e-9),
+                               / max(work_s, 1e-9),
+            "prefill_padding_overhead": pad / max(pad + s["prefill_tokens"],
+                                                  1),
+            "decode_stall_s": s["stall_s"],
         }
+
+    def ttft(self, since: float = 0.0) -> dict:
+        """Time-to-first-token stats over completed requests (seconds,
+        harvest-boundary resolution — honest for sync stepping; async mode
+        coalesces harvests, so pair with ``async_steps=False`` when TTFT is
+        the metric under study).  ``since`` drops requests submitted before
+        that ``time.perf_counter()`` stamp (e.g. compile-time warmups)."""
+        ts = sorted(r.first_token_s - r.submit_s for r in self._all.values()
+                    if r.first_token_s is not None and r.submit_s >= since)
+        if not ts:
+            return {"n": 0, "p50": float("nan"), "p95": float("nan")}
+        pct = lambda p: ts[min(int(p * (len(ts) - 1) + 0.5), len(ts) - 1)]
+        return {"n": len(ts), "p50": pct(0.50), "p95": pct(0.95),
+                "mean": sum(ts) / len(ts)}

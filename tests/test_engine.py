@@ -23,7 +23,10 @@ DENSE_ARCH = "qwen3_0_6b"
 
 def make_engine(arch=MOE_ARCH, seed=0, **eng_kw):
     cfg = get_config(arch).reduced()
-    kw = dict(max_batch=2, prefill_len=8, max_cache=32)
+    # these tests pin the TWO-PROGRAM reference engine's invariants
+    # (batched-vs-sequential prefill, async-vs-sync stepping); the unified
+    # token-budget path has its own suite in tests/test_unified_step.py
+    kw = dict(max_batch=2, prefill_len=8, max_cache=32, unified_step=False)
     kw.update(eng_kw)
     return ServingEngine(cfg, EngineConfig(**kw), rng=jax.random.PRNGKey(seed))
 

@@ -118,3 +118,43 @@ def test_scalability_trend_matches_table4():
                  / pm.estimate(pm.DBRX_TABLE1, pm.M2_ULTRA_10GBE, n).total
                  for n in (2, 3, 4)]
     assert comm_frac[0] < comm_frac[1] < comm_frac[2]
+
+
+def test_mixed_step_estimate_amortizes_weight_loads():
+    """ISSUE 3 satellite: the unified mixed-batch iteration bound.  Adding
+    a prefill chunk to a decode iteration grows the load term SUBLINEARLY
+    (distinct experts saturate) while FLOPs/comm grow linearly — so on the
+    paper's load-bound hardware a mixed iteration costs far less than a
+    separate prefill program of the same size."""
+    w, hw = pm.DBRX_TABLE1, pm.M2_ULTRA_10GBE
+    dec_only = pm.mixed_step_estimate(w, hw, 2, decode_rows=4, chunk_len=0)
+    mixed = pm.mixed_step_estimate(w, hw, 2, decode_rows=4, chunk_len=64)
+    sep_prefill = pm.mixed_step_estimate(w, hw, 2, decode_rows=0,
+                                         chunk_len=64)
+    # chunk rides on weights the decode rows already paid to load
+    assert mixed.total < dec_only.total + sep_prefill.total
+    # load term saturates: 64 extra tokens cost < 64x the per-token load
+    assert mixed.load_time < dec_only.load_time * 64
+    # FLOPs are linear in tokens
+    assert mixed.compute_time > dec_only.compute_time
+    # only the total token count matters, not the decode/prefill split:
+    # 4+0, 2+2 and 0+4 tokens are the same iteration
+    assert dec_only.total == pm.mixed_step_estimate(
+        w, hw, 2, decode_rows=2, chunk_len=2).total
+    assert dec_only.total == pm.mixed_step_estimate(
+        w, hw, 2, decode_rows=0, chunk_len=4).total
+
+
+def test_chunked_prefill_ttft_tradeoff():
+    """Smaller chunks mean more iterations, each paying the per-layer
+    collective latency: TTFT of the prompt itself monotonically worsens as
+    chunk_len shrinks — the cost side of the stall-free scheduler (the
+    benefit side, decode latency, is bounded by the smaller per-iteration
+    block)."""
+    w, hw = pm.DBRX_TABLE1, pm.M2_ULTRA_10GBE
+    ttfts = [pm.chunked_prefill_ttft(w, hw, 2, prompt_len=256, chunk_len=c)
+             for c in (256, 64, 16)]
+    assert ttfts[0] < ttfts[1] < ttfts[2]
+    # one whole-prompt chunk == a single mixed iteration of that size
+    assert ttfts[0] == pm.mixed_step_estimate(
+        w, hw, 2, decode_rows=0, chunk_len=256).total

@@ -31,13 +31,37 @@ def compiled_decode(arch, donate, **cfg_kw):
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
     ivec = jax.ShapeDtypeStruct((2,), jnp.int32)
     bvec = jax.ShapeDtypeStruct((2,), jnp.bool_)
+    fvec = jax.ShapeDtypeStruct((2,), jnp.float32)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
     txt = eng._jit_decode.lower(sds(eng.params), sds(eng.cache), ivec, ivec,
-                                bvec).compile().as_text()
+                                bvec, fvec, ivec, step,
+                                False).compile().as_text()
     return txt, jax.tree.leaves(eng.cache)
 
 
 def leaf_bytes(leaves):
     return [int(np.prod(a.shape)) * a.dtype.itemsize for a in leaves]
+
+
+def compiled_unified(arch, donate, chunk_len=4, **cfg_kw):
+    """Compile the engine's unified mixed-batch jit (ISSUE 3); returns
+    (hlo_text, cache leaves)."""
+    cfg = get_config(arch).reduced().replace(**cfg_kw)
+    eng = ServingEngine(cfg, EngineConfig(max_batch=2, prefill_len=8,
+                                          max_cache=32, unified_step=True,
+                                          chunk_len=chunk_len,
+                                          donate_buffers=donate))
+    sds = lambda t: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    ivec = jax.ShapeDtypeStruct((2,), jnp.int32)
+    bvec = jax.ShapeDtypeStruct((2,), jnp.bool_)
+    fvec = jax.ShapeDtypeStruct((2,), jnp.float32)
+    toks = jax.ShapeDtypeStruct((2, chunk_len), jnp.int32)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    txt = eng._jit_unified.lower(
+        sds(eng.params), sds(eng.cache), toks, ivec, ivec, ivec,
+        bvec, bvec, fvec, ivec, step, False).compile().as_text()
+    return txt, jax.tree.leaves(eng.cache)
 
 
 @pytest.mark.parametrize("arch,kw", [
@@ -60,6 +84,33 @@ def test_donated_decode_with_gather_path_never_copies_cache_leaf():
     program may contain are the gather path's selected-expert weight loads
     — never a buffer of a cache leaf's exact size."""
     txt, leaves = compiled_decode(MOE_ARCH, donate=True)
+    sizes = set(leaf_bytes(leaves))
+    offending = [c for c in hlo.sized_copies(txt, min(sizes))
+                 if c[1] in sizes]
+    assert offending == [], offending
+    assert hlo.input_output_aliases(txt) >= len(leaves)
+
+
+@pytest.mark.parametrize("arch,kw", [
+    (MOE_ARCH, dict(gather_decode_max_tk=0)),
+    (DENSE_ARCH, dict()),
+])
+def test_donated_unified_step_has_no_full_cache_copy(arch, kw):
+    """ISSUE 3 satellite: the unified mixed-batch program keeps the
+    zero-copy property — its per-row block writes are dynamic-slice
+    read-modify-writes on the scan carry, so the donated cache still
+    aliases in place with no full-cache-sized copy."""
+    txt, leaves = compiled_unified(arch, donate=True, **kw)
+    min_leaf = min(leaf_bytes(leaves))
+    copies = hlo.sized_copies(txt, min_leaf)
+    assert copies == [], copies
+    assert hlo.input_output_aliases(txt) >= len(leaves)
+
+
+def test_donated_unified_step_production_config_never_copies_cache_leaf():
+    """Production MoE unified config (gather fast path may engage for tiny
+    blocks): no copy of a cache leaf's exact size, all leaves aliased."""
+    txt, leaves = compiled_unified(MOE_ARCH, donate=True)
     sizes = set(leaf_bytes(leaves))
     offending = [c for c in hlo.sized_copies(txt, min(sizes))
                  if c[1] in sizes]
