@@ -17,7 +17,15 @@ Compares, on identical params / requests / config:
   * unified  — the PR 3 production path: zerocopy + the unified
     token-budget step (``EngineConfig.unified_step``): chunked prefill and
     mixed prefill/decode batches in ONE jit program, admissions never
-    stall decode.
+    stall decode;
+  * paged    — the PR 4 production path: unified + the paged KV cache
+    (``EngineConfig.paged``): one donated page pool + per-row block tables
+    + the radix prefix cache (docs/DESIGN.md §7).  The throughput row
+    compares the LAYOUT only (the warmup's cached prefix is cleared); the
+    ``--shared-prefix-len`` round measures prefix reuse on purpose —
+    requests sharing a system prompt skip its prefill entirely, gated on
+    prefix-hit tokens >= the shared length and on the hit tokens exactly
+    explaining the prefill-token gap vs the contiguous engine.
 
 A staggered-arrival round (``run_staggered``, skip with
 ``--skip-staggered``) A/Bs the two-program reference against the unified
@@ -62,6 +70,13 @@ MODES = {
     # prefill/decode batches in ONE jit program, admits never stall decode
     "unified": (dict(batched_prefill=True, async_steps=True,
                      donate_buffers=True, unified_step=True), True),
+    # paged KV cache (PR 4): page pool + block tables + prefix cache —
+    # the throughput row measures the LAYOUT only (the prefix tree is
+    # cleared after warmup so no accidental reuse flatters it; the
+    # shared-prefix round below measures reuse on purpose)
+    "paged": (dict(batched_prefill=True, async_steps=True,
+                   donate_buffers=True, unified_step=True, paged=True),
+              True),
 }
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -69,18 +84,18 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
 
 
 def make_engine(cfg, mode_kw, *, prompt_len, new_tokens, max_batch,
-                chunk_len):
+                chunk_len, page_size=8):
     return ServingEngine(cfg, EngineConfig(
         max_batch=max_batch, prefill_len=prompt_len,
         max_cache=prompt_len + new_tokens + 8, chunk_len=chunk_len,
-        **mode_kw), rng=jax.random.PRNGKey(0))
+        page_size=page_size, **mode_kw), rng=jax.random.PRNGKey(0))
 
 
 def run_mode(cfg, mode_kw, *, requests, new_tokens, prompt_len, max_batch,
-             chunk_len, seed=0, full_len=False):
+             chunk_len, page_size=8, seed=0, full_len=False):
     eng = make_engine(cfg, mode_kw, prompt_len=prompt_len,
                       new_tokens=new_tokens, max_batch=max_batch,
-                      chunk_len=chunk_len)
+                      chunk_len=chunk_len, page_size=page_size)
     rng = np.random.default_rng(seed)
     # full_len pins every prompt at exactly prompt_len so the unified
     # (no-padding) engine is comparable token-for-token with the padded
@@ -94,6 +109,10 @@ def run_mode(cfg, mode_kw, *, requests, new_tokens, prompt_len, max_batch,
     # then reset the accumulated stats so tok/s excludes compile time
     eng.submit(prompts[0], max_new_tokens=2)
     eng.run_until_done()
+    if eng.paged:
+        # drop the warmup prompt's cached pages: the throughput row must
+        # compare LAYOUTS, not hand the paged engine a free prefix hit
+        eng.prefix.clear()
     for k in eng.stats:
         eng.stats[k] = type(eng.stats[k])()
 
@@ -164,6 +183,57 @@ def run_staggered(cfg, mode_kw, *, requests, new_tokens, prompt_len,
     }
 
 
+def run_shared_prefix(cfg, *, requests, new_tokens, prompt_len, max_batch,
+                      chunk_len, page_size, shared_len, paged, seed=0):
+    """Shared-system-prompt workload (PR 4 acceptance A/B): ``requests``
+    prompts share their leading ``shared_len`` tokens; each is submitted
+    after the previous completes, so the paged engine's prefix cache holds
+    the shared pages when every follower arrives and its prefill shrinks
+    to the distinct tail.  Reports per-request TTFT (sync stepping — the
+    honest stamp), real prefill-token counts, and the paged engine's
+    prefix/page statistics; the contiguous unified engine re-prefills the
+    shared prefix every time and is the baseline."""
+    kw = dict(batched_prefill=True, async_steps=False, donate_buffers=True,
+              unified_step=True, paged=paged)
+    eng = make_engine(cfg, kw, prompt_len=prompt_len, new_tokens=new_tokens,
+                      max_batch=max_batch, chunk_len=chunk_len,
+                      page_size=page_size)
+    rng = np.random.default_rng(seed)
+    sysp = rng.integers(0, cfg.vocab_size, shared_len)
+    prompts = [np.concatenate([sysp, rng.integers(0, cfg.vocab_size,
+                                                  prompt_len - shared_len)])
+               for _ in range(requests)]
+    # warmup on an UNRELATED prompt (compile only, no prefix seeding)
+    eng.submit(rng.integers(0, cfg.vocab_size, prompt_len),
+               max_new_tokens=2)
+    eng.run_until_done()
+    if eng.paged:
+        eng.prefix.clear()
+    for k in eng.stats:
+        eng.stats[k] = type(eng.stats[k])()
+    t0 = time.perf_counter()
+    ttfts, gens = [], {}
+    for p in prompts:
+        uid = eng.submit(p, max_new_tokens=new_tokens)
+        eng.run_until_done()
+        req = eng._all[uid]
+        ttfts.append(req.first_token_s - req.submit_s)
+        gens[uid] = list(req.generated)
+    wall = time.perf_counter() - t0
+    out = {
+        "wall_s": wall,
+        "ttft_first_ms": ttfts[0] * 1e3,
+        # followers are where prefix hits land: their mean TTFT is the
+        # prefix-hit TTFT the perf model estimates (prefix_hit_ttft)
+        "ttft_followers_mean_ms": 1e3 * sum(ttfts[1:]) / max(len(ttfts) - 1,
+                                                             1),
+        "prefill_tokens": eng.stats["prefill_tokens"],
+        "generated": gens,
+    }
+    out.update({k: v for k, v in eng.paged_stats().items() if k != "paged"})
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_moe_30b_a3b")
@@ -184,11 +254,20 @@ def main():
                          "measurements taken outside this run)")
     ap.add_argument("--chunk-len", type=int, default=16,
                     help="unified mode: prefill chunk / block width")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="paged mode: tokens per page (CI passes a value "
+                         "that does not divide --prompt-len to cover "
+                         "ragged paging)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="run the shared-system-prompt A/B round with this "
+                         "many shared leading tokens (0 = skip)")
     ap.add_argument("--stagger-steps", type=int, default=4,
                     help="staggered workload: iterations between arrivals")
     ap.add_argument("--skip-staggered", action="store_true",
                     help="skip the staggered-arrival TTFT/stall A/B round")
     args = ap.parse_args()
+    if args.shared_prefix_len >= args.prompt_len:
+        ap.error("--shared-prefix-len must be < --prompt-len")
 
     base_cfg = get_config(args.arch).reduced()
     if args.equal_capacity:
@@ -206,6 +285,7 @@ def main():
                                        prompt_len=args.prompt_len,
                                        max_batch=args.max_batch,
                                        chunk_len=args.chunk_len,
+                                       page_size=args.page_size,
                                        full_len=args.equal_capacity))
             # identical engines must generate identical tokens every rep
             assert reps[name][-1]["generated"] == reps[name][0]["generated"], \
@@ -244,6 +324,12 @@ def main():
         # token-neutral — the PR 3 acceptance gate, also run in CI
         assert gens["unified"] == gens["zerocopy"], \
             "unified step diverged from the two-program reference"
+        # paged == contiguous unified, token for token: the page-pool +
+        # block-table layout (with a page size that need not divide the
+        # prompt length — CI passes one that doesn't) changes WHERE K/V
+        # live, never the attended values — the PR 4 acceptance gate
+        assert gens["paged"] == gens["unified"], \
+            "paged cache diverged from the contiguous unified engine"
 
     speedup = (results["async"]["tok_per_s_wall"]
                / results["legacy"]["tok_per_s_wall"])
@@ -251,15 +337,19 @@ def main():
                   / results["async"]["tok_per_s_wall"])
     speedup_uni = (results["unified"]["tok_per_s_wall"]
                    / results["zerocopy"]["tok_per_s_wall"])
+    speedup_pg = (results["paged"]["tok_per_s_wall"]
+                  / results["unified"]["tok_per_s_wall"])
     print(markdown_table(
         ["mode", "wall s", "tok/s (wall)", "prefill tok/s", "decode tok/s"],
         rows))
     print(f"\nasync+batched vs legacy speedup: {speedup:.2f}x")
     print(f"zerocopy (donation+gather) vs async speedup: {speedup_zc:.2f}x")
     print(f"unified vs zerocopy (throughput) : {speedup_uni:.2f}x")
+    print(f"paged vs unified (layout only)   : {speedup_pg:.2f}x")
     results["speedup_async_vs_legacy"] = speedup
     results["speedup_zerocopy_vs_async"] = speedup_zc
     results["speedup_unified_vs_zerocopy"] = speedup_uni
+    results["speedup_paged_vs_unified"] = speedup_pg
 
     # staggered-arrival latency A/B: two-program reference vs unified,
     # interleaved rounds, best (lowest) TTFT p95 kept per mode — the
@@ -288,6 +378,42 @@ def main():
               f"{r['decode_stall_ms']:.1f}", f"{r['tok_per_s_wall']:.1f}"]
              for sname, r in staggered.items()]))
         results["staggered"] = staggered
+
+    # shared-system-prompt A/B (PR 4 acceptance): contiguous unified
+    # re-prefills the shared prefix for every request; the paged engine's
+    # prefix cache skips it.  Gates: token equality, and the paged engine
+    # must have skipped at least the shared prefix's worth of prefill
+    # (the hit tokens exactly explain the prefill-token gap).
+    shared = {}
+    if args.shared_prefix_len > 0:
+        for sname, is_paged in (("contiguous", False), ("paged", True)):
+            shared[sname] = run_shared_prefix(
+                cfg=base_cfg, requests=args.requests,
+                new_tokens=args.new_tokens, prompt_len=args.prompt_len,
+                max_batch=args.max_batch, chunk_len=args.chunk_len,
+                page_size=args.page_size,
+                shared_len=args.shared_prefix_len, paged=is_paged)
+        sg = {k: r.pop("generated") for k, r in shared.items()}
+        assert sg["paged"] == sg["contiguous"], \
+            "prefix-cache reuse changed tokens"
+        hit = shared["paged"]["prefix_hit_tokens"]
+        assert hit >= args.shared_prefix_len, \
+            (hit, args.shared_prefix_len)
+        assert (shared["contiguous"]["prefill_tokens"]
+                - shared["paged"]["prefill_tokens"] == hit), shared
+        print(f"\nshared system prompt ({args.shared_prefix_len} of "
+              f"{args.prompt_len} tokens, {args.requests} sequential "
+              f"requests):")
+        print(markdown_table(
+            ["mode", "TTFT req1 ms", "TTFT followers ms", "prefill toks",
+             "hit toks", "hit rate"],
+            [[sname, f"{r['ttft_first_ms']:.1f}",
+              f"{r['ttft_followers_mean_ms']:.1f}",
+              str(r["prefill_tokens"]),
+              str(r.get("prefix_hit_tokens", 0)),
+              f"{r.get('prefix_hit_rate', 0.0):.0%}"]
+             for sname, r in shared.items()]))
+        results["shared_prefix"] = shared
     path = save_result("serving_engine", results)
     print(f"saved {path}")
 
@@ -298,7 +424,8 @@ def main():
         "config": {
             "requests": args.requests, "new_tokens": args.new_tokens,
             "prompt_len": args.prompt_len, "max_batch": args.max_batch,
-            "chunk_len": args.chunk_len,
+            "chunk_len": args.chunk_len, "page_size": args.page_size,
+            "shared_prefix_len": args.shared_prefix_len,
             "equal_capacity": bool(args.equal_capacity),
             "capacity_factor": base_cfg.capacity_factor,
             "gather_decode_max_tk": base_cfg.gather_decode_max_tk,
@@ -310,9 +437,12 @@ def main():
         "speedup_async_vs_legacy": speedup,
         "speedup_zerocopy_vs_async": speedup_zc,
         "speedup_unified_vs_zerocopy": speedup_uni,
+        "speedup_paged_vs_unified": speedup_pg,
     }
     if staggered:
         bench["staggered_ab"] = staggered
+    if shared:
+        bench["shared_prefix_ab"] = shared
     if args.note:
         bench["note"] = args.note
     with open(BENCH_JSON, "w") as f:

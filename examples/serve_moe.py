@@ -24,6 +24,12 @@ The engine defaults to the zero-copy production configuration:
   shard's token block into m chunks and overlap chunk i's expert FFN with
   chunk i+1's all_to_all dispatch (token-exact vs plain ``a2a``;
   single-token decode falls back to ``decentralized``).
+* ``EngineConfig.paged`` + ``page_size``/``num_pages`` (docs/DESIGN.md
+  §7) — paged KV cache: one donated page pool + per-row block tables
+  instead of max_cache slots per request, admission gated on free pages,
+  and a radix prefix cache so requests sharing a system prompt skip the
+  shared prefill entirely (the demo below passes ``--shared-prefix``-style
+  sharing via ``serve_demo(shared_prefix=...)``).
 
 Compare engine modes end-to-end with
 ``python -m benchmarks.serving_engine`` (writes repo-root
@@ -37,7 +43,8 @@ def main():
     cfg = get_config("qwen3_moe_30b_a3b").reduced()
     print(f"serving {cfg.name} ({cfg.num_experts} experts, "
           f"top-{cfg.experts_per_token})")
-    serve_demo(cfg, requests=6, new_tokens=12, prompt_len=24, max_batch=3)
+    serve_demo(cfg, requests=6, new_tokens=12, prompt_len=24, max_batch=3,
+               paged=True, page_size=8, shared_prefix=12)
 
 
 if __name__ == "__main__":

@@ -261,6 +261,94 @@ def chunked_prefill_ttft(w: MoEWorkload, hw: HardwareProfile, n_nodes: int,
     return total
 
 
+# ---------------------------------------------------------------------------
+# memory-capacity term (paper Table 2's unified-memory budget) and the
+# paged-KV-cache serving model (serving/engine.py EngineConfig.paged,
+# docs/DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+# paper Table 2: each Mac Studio node is an M2 Ultra with 192 GB of
+# unified memory — weights, KV cache and activations share one budget,
+# which is exactly why the paper pre-allocates buffers (C1) and why the
+# cache layout decides max concurrency
+M2_ULTRA_MEM_BYTES = 192e9
+
+
+def kv_bytes_per_token(cfg=None, *, n_layers: int = 0, num_kv_heads: int = 0,
+                       head_dim: int = 0, precision: int = 2,
+                       quantized: bool = False) -> float:
+    """KV-cache bytes one token occupies across all layers (K and V).
+    Pass a ModelConfig or the raw dims; ``quantized`` models the int8
+    cache (1 byte/value + one fp32 scale per (token, head) for each of
+    K and V)."""
+    if cfg is not None:
+        n_layers, num_kv_heads, head_dim = (cfg.num_layers, cfg.num_kv_heads,
+                                            cfg.head_dim)
+        quantized = getattr(cfg, "kv_cache_dtype", "") == "int8"
+    per_value = 1 if quantized else precision
+    per_tok = 2 * num_kv_heads * head_dim * per_value
+    if quantized:
+        per_tok += 2 * num_kv_heads * 4          # fp32 scales
+    return float(n_layers * per_tok)
+
+
+def max_concurrent_requests(pool_bytes: float, bytes_per_token: float,
+                            mean_context: int, *, page_size: int = 0,
+                            slot_len: int = 0) -> int:
+    """Memory-capacity term: how many requests a KV pool of ``pool_bytes``
+    holds at once.
+
+    The contiguous layout (``page_size=0``) reserves ``slot_len``
+    (max_cache) token slots per admitted request regardless of use — the
+    pre-PR-4 engine.  The paged layout rounds each request's real context
+    up to whole pages only, so short requests stop paying for long ones'
+    headroom; with ``page_size=1`` this is the information-theoretic bound
+    pool_tokens / mean_context.  ``mean_context`` is prompt + generated
+    tokens actually resident (the Table-2 budget divides by THIS, not by
+    max_cache, once the cache is paged)."""
+    if pool_bytes <= 0 or bytes_per_token <= 0:
+        return 0
+    pool_tokens = pool_bytes / bytes_per_token
+    if page_size <= 0:
+        per_req = max(slot_len, mean_context)
+    else:
+        per_req = -(-mean_context // page_size) * page_size
+    return int(pool_tokens // max(per_req, 1))
+
+
+def serving_capacity(cfg, *, pool_bytes: float, max_cache: int,
+                     mean_context: int, page_size: int) -> dict:
+    """Contiguous-vs-paged concurrency at EQUAL pool bytes (the ISSUE-4
+    acceptance comparison): returns both bounds plus their ratio — the
+    concurrency the paged layout buys from the same unified-memory
+    budget."""
+    bpt = kv_bytes_per_token(cfg)
+    contiguous = max_concurrent_requests(pool_bytes, bpt, mean_context,
+                                         slot_len=max_cache)
+    paged = max_concurrent_requests(pool_bytes, bpt, mean_context,
+                                    page_size=page_size)
+    return {"bytes_per_token": bpt, "contiguous": contiguous,
+            "paged": paged,
+            "gain": paged / contiguous if contiguous else float("inf")}
+
+
+def prefix_hit_ttft(w: MoEWorkload, hw: HardwareProfile, n_nodes: int,
+                    prompt_len: int, shared_len: int, chunk_len: int,
+                    decode_rows: int = 0, page_size: int = 1,
+                    num_experts: int = 16, top_k: int = 4) -> float:
+    """Modelled TTFT of a prompt whose leading ``shared_len`` tokens hit
+    the prefix cache (serving/paging.PrefixCache): only the page-aligned
+    shared prefix is skipped (rounded DOWN to whole pages — partial tail
+    sharing additionally recovers up to a page, but never the final
+    prompt token, which is always recomputed to produce the first logit).
+    ``shared_len=0`` reproduces ``chunked_prefill_ttft`` exactly."""
+    shared = min((shared_len // max(page_size, 1)) * max(page_size, 1),
+                 prompt_len - 1)
+    remaining = max(prompt_len - shared, 1)
+    return chunked_prefill_ttft(w, hw, n_nodes, remaining, chunk_len,
+                                decode_rows, num_experts, top_k)
+
+
 def cost_efficiency(throughput: float, n_nodes: int,
                     hw: HardwareProfile) -> float:
     """Table 5 metric: tokens/sec per USD of list-price hardware."""

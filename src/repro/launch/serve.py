@@ -35,21 +35,27 @@ def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
                max_batch: int = 4, seed: int = 0, legacy: bool = False,
                unified: bool = True, chunk_len: int = 32,
                token_budget: int = 0, temperature: float = 0.0,
-               top_k: int = 0):
+               top_k: int = 0, paged: bool = False, page_size: int = 16,
+               num_pages: int = 0, shared_prefix: int = 0):
     eng = ServingEngine(cfg, EngineConfig(
         max_batch=max_batch, prefill_len=prompt_len,
         max_cache=prompt_len + new_tokens + 8,
         batched_prefill=not legacy, async_steps=not legacy,
         unified_step=unified and not legacy, chunk_len=chunk_len,
-        token_budget=token_budget))
+        token_budget=token_budget, paged=paged, page_size=page_size,
+        num_pages=num_pages))
     rng = np.random.default_rng(seed)
+    sysp = rng.integers(0, cfg.vocab_size, shared_prefix)
     for _ in range(requests):
         plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
-        eng.submit(rng.integers(0, cfg.vocab_size, plen), new_tokens,
+        plen = max(plen, min(shared_prefix + 1, prompt_len))
+        tail = rng.integers(0, cfg.vocab_size, max(plen - shared_prefix, 1))
+        eng.submit(np.concatenate([sysp, tail])[:prompt_len], new_tokens,
                    temperature=temperature, top_k=top_k)
     done = eng.run_until_done()
     tp = eng.throughput()
     mode = ("legacy (seq prefill, sync)" if legacy
+            else "paged unified" if paged
             else "unified token-budget" if eng.unified
             else "batched + async (reference)")
     print(f"completed {len(done)} requests [{mode}]")
@@ -62,6 +68,18 @@ def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
     if tt["n"]:
         print(f"TTFT p50/p95           : {tt['p50'] * 1e3:.1f} / "
               f"{tt['p95'] * 1e3:.1f} ms over {tt['n']} requests")
+    ps = eng.paged_stats()
+    if ps.get("paged"):
+        print(f"page pool              : {ps['pages_in_use']}/"
+              f"{ps['num_pages']} pages in use, high-water "
+              f"{ps['pages_hwm']} ({ps['pool_utilization']:.1%} of pool), "
+              f"page_size {ps['page_size']}")
+        print(f"prefix cache           : hit rate {ps['prefix_hit_rate']:.1%}"
+              f" ({ps['prefix_hits']}/{ps['prefix_lookups']} lookups), "
+              f"{ps['prefix_hit_tokens']} prefill tokens skipped, "
+              f"{ps['prefix_cached_pages']} pages cached, "
+              f"{ps['prefix_evictions']} evictions, "
+              f"{ps['cow_copies']} CoW copies")
     if cfg.is_moe:
         for n in (2, 3, 4):
             e = eng.expected_experts_per_node(n)
@@ -96,6 +114,18 @@ def main():
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="per-request top-k cut (0 = full vocab)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: page pool + block tables + "
+                         "prefix-cache reuse (docs/DESIGN.md §7; implies "
+                         "the unified scheduler)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged mode: tokens per page")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="paged mode: pool size in pages (0 = auto: the "
+                         "contiguous layout's token capacity)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of system prompt shared by every request "
+                         "(exercises the prefix cache in --paged mode)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -105,7 +135,9 @@ def main():
                prompt_len=args.prompt_len, max_batch=args.max_batch,
                legacy=args.legacy, unified=not args.reference,
                chunk_len=args.chunk_len, token_budget=args.token_budget,
-               temperature=args.temperature, top_k=args.top_k)
+               temperature=args.temperature, top_k=args.top_k,
+               paged=args.paged, page_size=args.page_size,
+               num_pages=args.num_pages, shared_prefix=args.shared_prefix)
 
 
 if __name__ == "__main__":

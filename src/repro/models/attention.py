@@ -488,6 +488,115 @@ def attn_block_step(p: dict, cfg, cache: dict, x: Array, positions: Array,
     return jnp.einsum("bse,ed->bsd", out, p["wo"]), new_cache
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache: page pool + block-table attention (docs/DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def paged_layer_cache_spec(cfg, num_pages: int, page_size: int, dtype):
+    """Per-layer paged pool: ``(num_pages, page_size, Hkv, hd)``.  Unlike the
+    contiguous layout there is no batch dimension — rows map logical blocks
+    to physical pages through a per-row block table, so pool bytes buy
+    tokens wherever they are needed instead of ``max_cache`` slots per
+    admitted request."""
+    shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    if kv_quantized(cfg):
+        sshape = shape[:-1] + (1,)
+        return {"k": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "k_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
+                "v_scale": jax.ShapeDtypeStruct(sshape, jnp.float32)}
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def _paged_scatter(pool: Array, new: Array, page: Array, slot: Array) -> Array:
+    """Write new (B, T, ...) rows at (page, slot) pairs (B, T) into pool
+    (P, ps, ...).  Out-of-range page ids drop the write (invalid tokens are
+    routed to the ``num_pages`` sentinel).  An in-place scatter on the scan
+    carry, so a donating caller keeps the zero-copy hot loop."""
+    return pool.at[page, slot].set(new.astype(pool.dtype), mode="drop")
+
+
+def attn_block_step_paged(p: dict, cfg, cache: dict, x: Array,
+                          positions: Array, lengths: Array, seg_lens: Array,
+                          block_tables: Array, window: int | None,
+                          mrope_positions: Array | None = None,
+                          mesh=None) -> tuple[Array, dict]:
+    """``attn_block_step`` over a paged KV cache.
+
+    cache: pool leaves ``(num_pages, page_size, Hkv, hd)`` shared by every
+    row; ``block_tables`` (B, NB) int32 maps row b's logical block i (cache
+    positions [i*page_size, (i+1)*page_size)) to a physical page.  Rows
+    sharing a prompt prefix point their leading entries at the same pages
+    (serving/paging.PrefixCache), which is exact: causal attention makes a
+    prefix's K/V a pure function of the prefix tokens.
+
+    Token j of row b (absolute position ``positions[b, j]``) writes its
+    K/V at page ``block_tables[b, pos // ps]`` slot ``pos % ps`` — an
+    in-place scatter on the scan-carry pool (invalid tokens drop via an
+    out-of-range page sentinel, exactly like the ring path of
+    ``_update_cache_block``).  Attention then gathers each row's pages
+    into a (B, NB*ps, Hkv, hd) virtual cache whose slot s holds absolute
+    position s, so the position-offset causal mask of the contiguous path
+    applies unchanged (the gather is the pure-JAX form of a paged-attention
+    kernel's block-table indirection; it reads at most the same bytes the
+    contiguous layout's full-cache attention read).  Ring caches
+    (sliding window == cache length) are never paged — the engine keeps
+    the reference path for those archs — but plain position windows (the
+    long-context SWA variant) mask exactly as in ``attn_block_step``.
+
+    x: (B, T, D); positions: (B, T) absolute; lengths/seg_lens: (B,).
+    Returns ((B, T, D), cache')."""
+    b, t, _ = x.shape
+    num_pages, page_size = cache["k"].shape[:2]
+    nb = block_tables.shape[1]
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, mrope_positions,
+                                   mesh)
+    valid = jnp.arange(t)[None, :] < seg_lens[:, None]          # (B, T)
+    blk = positions // page_size
+    page = jnp.take_along_axis(block_tables, jnp.clip(blk, 0, nb - 1),
+                               axis=1)
+    # invalid tokens and positions beyond the table drop their write
+    page = jnp.where(valid & (blk < nb), page, num_pages)
+    slot = positions % page_size
+
+    if kv_quantized(cfg):
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_cache = {
+            kk: _paged_scatter(cache[kk], nn, page, slot)
+            for kk, nn in (("k", kq), ("v", vq),
+                           ("k_scale", ks), ("v_scale", vs))
+        }
+    else:
+        new_cache = {"k": _paged_scatter(cache["k"], k_new, page, slot),
+                     "v": _paged_scatter(cache["v"], v_new, page, slot)}
+
+    bt = jnp.clip(block_tables, 0, num_pages - 1)
+
+    def gather(pool):
+        pages = jnp.take(pool, bt, axis=0)          # (B, NB, ps, Hkv, ·)
+        return pages.reshape((b, nb * page_size) + pool.shape[2:])
+
+    if kv_quantized(cfg):
+        k_cache = dequantize_kv(gather(new_cache["k"]),
+                                gather(new_cache["k_scale"]), x.dtype)
+        v_cache = dequantize_kv(gather(new_cache["v"]),
+                                gather(new_cache["v_scale"]), x.dtype)
+    else:
+        k_cache, v_cache = gather(new_cache["k"]), gather(new_cache["v"])
+
+    # virtual slot s holds absolute position s: the linear-cache mask
+    slot_pos = jnp.arange(nb * page_size, dtype=jnp.int32)[None, None, :]
+    qp = jnp.where(valid, positions, -1)[:, :, None]            # (B, T, 1)
+    mask = slot_pos <= qp                                       # (B, T, S)
+    if window is not None:
+        mask = mask & (slot_pos > qp - window)
+    out = _attend_grouped_block(cfg, q, k_cache, v_cache, mask)
+    out = out.reshape(b, t, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]), new_cache
+
+
 def attn_decode_step_cp(p: dict, cfg, cache: dict, x: Array, lengths: Array,
                         window: int | None, mesh,
                         mrope_positions: Array | None = None

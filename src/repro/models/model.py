@@ -66,6 +66,8 @@ class Model:
     prefill_routed: Callable
     decode_step_routed: Callable
     forward_routed: Callable
+    paged_cache_specs: Callable
+    init_paged_cache: Callable
 
 
 def _embed_inputs(cfg, params, batch) -> tuple[Array, Array, Array | None, Array]:
@@ -167,6 +169,17 @@ def build_model(cfg) -> Model:
     def init_cache(batch: int, cache_len: int):
         return transformer.init_stack_cache(cfg, batch, cache_len, dt)
 
+    # paged pool (docs/DESIGN.md §7): one (L, num_pages, page_size, Hkv,
+    # hd) leaf per cache kind, shared across rows via per-row block tables
+    # (batch["block_tables"] in forward_routed)
+    def paged_cache_specs(num_pages: int, page_size: int):
+        return transformer.paged_stack_cache_spec(cfg, num_pages, page_size,
+                                                  dt)
+
+    def init_paged_cache(num_pages: int, page_size: int):
+        return transformer.init_paged_stack_cache(cfg, num_pages, page_size,
+                                                  dt)
+
     # ---- prefill ------------------------------------------------------------
     def prefill_routed(params, batch, cache, mesh=None):
         x, pos, mrope, _ = _embed_inputs(cfg, params, batch)
@@ -210,12 +223,20 @@ def build_model(cfg) -> Model:
         per-row cache offsets (docs/DESIGN.md §6).
 
         batch: {"tokens": (B, T) int32, "lengths": (B,) int32 cache offsets,
-        "seg_lens": (B,) int32 valid-token counts, optional "token_mask"}.
-        Row b appends its first seg_lens[b] tokens at positions
-        lengths[b]..lengths[b]+seg_lens[b]-1; T=1/seg_lens=1 is a decode
-        step, seg_lens=T at lengths=0 is whole-prompt prefill, and per-row
-        mixes are chunked-prefill / mixed prefill+decode batches.  The
-        prefill/decode twins above remain as the two-program reference.
+        "seg_lens": (B,) int32 valid-token counts, optional "token_mask",
+        optional "block_tables"}.  Row b appends its first seg_lens[b]
+        tokens at positions lengths[b]..lengths[b]+seg_lens[b]-1;
+        T=1/seg_lens=1 is a decode step, seg_lens=T at lengths=0 is
+        whole-prompt prefill, and per-row mixes are chunked-prefill /
+        mixed prefill+decode batches.  The prefill/decode twins above
+        remain as the two-program reference.
+
+        With ``block_tables`` (B, NB) int32 the cache is the paged pool of
+        ``init_paged_cache`` (docs/DESIGN.md §7): row b's logical block i
+        lives on physical page block_tables[b, i], so rows sharing a
+        prompt prefix alias the same pages and the pool is sized in pages,
+        not max_batch x max_cache slots.  Block tables are host-scheduler
+        state handed to the device like ``lengths`` — never donated.
 
         Returns (logits (B, V) at each row's LAST VALID position, cache',
         routing (L, B*T, K) int32 | None).  The cache is updated via
@@ -238,12 +259,21 @@ def build_model(cfg) -> Model:
         token_mask = batch.get("token_mask")
         if token_mask is None:
             token_mask = jnp.arange(t)[None] < seg_lens[:, None]
-        cache_len = _attn_cache_len(cfg, cache)
+        block_tables = batch.get("block_tables")
+        if block_tables is not None:
+            # paged pool leaves are (L, P, page_size, ...): the per-row
+            # cache extent is the block table's reach.  NB: this rounds
+            # UP to whole pages — callers whose logical context is not
+            # page-aligned should pass ``context_len`` so the windowing
+            # decision (effective_window) matches the contiguous layout
+            cache_len = block_tables.shape[1] * cache["k"].shape[2]
+        else:
+            cache_len = _attn_cache_len(cfg, cache)
         window = (transformer.effective_window(cfg, context_len or cache_len)
                   if cache_len is not None else cfg.sliding_window)
         x, cache, routing = transformer.unified_stack(
             cfg, mesh, params["blocks"], x, positions, lengths, seg_lens,
-            cache, window, token_mask=token_mask)
+            cache, window, token_mask=token_mask, block_tables=block_tables)
         sel = jnp.clip(seg_lens - 1, 0, t - 1)
         x_sel = jnp.take_along_axis(x, sel[:, None, None], axis=1)  # (B,1,D)
         x_sel = layers.norm_apply(cfg.norm, params["final_norm"], x_sel)
@@ -252,7 +282,7 @@ def build_model(cfg) -> Model:
 
     return Model(cfg, init, forward, loss, prefill, decode_step,
                  cache_specs, init_cache, prefill_routed, decode_step_routed,
-                 forward_routed)
+                 forward_routed, paged_cache_specs, init_paged_cache)
 
 
 def _attn_cache_len(cfg, cache) -> int | None:

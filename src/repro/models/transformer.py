@@ -143,7 +143,7 @@ def init_blocks(cfg, key) -> dict:
 
 def _attn_mlp_block(cfg, mesh, layer_p, x, positions, window, mrope_pos,
                     cache_l=None, decode=False, token_mask=None,
-                    block_lens=None):
+                    block_lens=None, block_tables=None):
     """Generic attention(+cache) + {mlp | moe} block.
 
     Returns (x, new_cache, aux, routed) where ``routed`` is the MoE layer's
@@ -154,9 +154,17 @@ def _attn_mlp_block(cfg, mesh, layer_p, x, positions, window, mrope_pos,
     ``block_lens`` = (lengths, seg_lens) selects the unified token-block
     path (attention.attn_block_step): an arbitrary (B, T) chunk appended at
     per-row cache offsets — chunked prefill and mixed prefill/decode batches
-    share this one body (docs/DESIGN.md §6)."""
+    share this one body (docs/DESIGN.md §6).  ``block_tables`` (B, NB)
+    additionally selects the paged-cache form of that path: ``cache_l``
+    holds page-pool leaves and each row reaches its cache through its
+    block table (docs/DESIGN.md §7)."""
     h = layers.norm_apply(cfg.norm, layer_p["ln1"], x)
-    if block_lens is not None:
+    if block_lens is not None and block_tables is not None:
+        lengths, seg_lens = block_lens
+        h, new_cache = attention.attn_block_step_paged(
+            layer_p["attn"], cfg, cache_l, h, positions, lengths, seg_lens,
+            block_tables, window, mrope_pos, mesh=mesh)
+    elif block_lens is not None:
         lengths, seg_lens = block_lens
         h, new_cache = attention.attn_block_step(
             layer_p["attn"], cfg, cache_l, h, positions, lengths, seg_lens,
@@ -330,6 +338,27 @@ def init_stack_cache(cfg, batch: int, cache_len: int, dtype):
                         stack_cache_spec(cfg, batch, cache_len, dtype))
 
 
+def paged_stack_cache_spec(cfg, num_pages: int, page_size: int, dtype):
+    """Stacked paged pool: one ``(L, num_pages, page_size, Hkv, hd)`` leaf
+    per cache kind (docs/DESIGN.md §7).  Only token-input attention
+    families page their cache; ssm/hybrid state is per-row and stays on
+    the contiguous layout."""
+    if cfg.family not in ("dense", "moe", "vlm", "audio"):
+        raise NotImplementedError(
+            f"paged KV cache supports attention-cache families, not "
+            f"{cfg.family!r}")
+    per = attention.paged_layer_cache_spec(cfg, num_pages, page_size, dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.num_layers,) + s.shape, s.dtype),
+        per)
+
+
+def init_paged_stack_cache(cfg, num_pages: int, page_size: int, dtype):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        paged_stack_cache_spec(cfg, num_pages, page_size,
+                                               dtype))
+
+
 def effective_window(cfg, seq_len: int) -> int | None:
     """Window actually used at this sequence length: native sliding window if
     the arch has one; the long-context SWA variant kicks in beyond
@@ -435,7 +464,7 @@ def decode_stack(cfg, mesh, blocks, x, lengths, cache, window,
 
 
 def unified_stack(cfg, mesh, blocks, x, positions, lengths, seg_lens, cache,
-                  window, mrope_pos=None, token_mask=None):
+                  window, mrope_pos=None, token_mask=None, block_tables=None):
     """Length-agnostic token-block forward through all layers — the ONE
     layer body behind chunked prefill, decode, and mixed prefill/decode
     batches (the prefill/decode twin stacks remain as the
@@ -446,7 +475,10 @@ def unified_stack(cfg, mesh, blocks, x, positions, lengths, seg_lens, cache,
     routing) with routing (L, B*T, K) int32 for the moe family (invalid
     tokens read the E_pad sentinel), else None.  The cache rides the layer
     scan as a carry (``_scan_stack_with_cache``), so a donating caller
-    keeps the zero-copy hot loop."""
+    keeps the zero-copy hot loop.  With ``block_tables`` (B, NB) the cache
+    is the paged pool of ``paged_stack_cache_spec`` and every row reaches
+    its slots through its block table (docs/DESIGN.md §7) — same carry,
+    same zero-copy property."""
     if cfg.family not in ("dense", "moe", "vlm", "audio"):
         raise NotImplementedError(
             f"unified_stack supports attention-cache families, not "
@@ -456,7 +488,8 @@ def unified_stack(cfg, mesh, blocks, x, positions, lengths, seg_lens, cache,
         out, nc, _, routed = _attn_mlp_block(cfg, mesh, lp, xx, positions,
                                              window, mrope_pos, cl,
                                              token_mask=token_mask,
-                                             block_lens=(lengths, seg_lens))
+                                             block_lens=(lengths, seg_lens),
+                                             block_tables=block_tables)
         if routed is None:
             routed = jnp.zeros((), jnp.int32)
         return out, nc, routed

@@ -65,6 +65,18 @@ host half.
     default; otherwise per-row top-k Gumbel sampling with an RNG folded on
     (engine step, slot)).  Token-equality gates always run at
     temperature=0.
+  * **Paged KV cache + prefix reuse** (``EngineConfig.paged``;
+    docs/DESIGN.md §7) — the contiguous (max_batch, max_cache)
+    slot-per-request cache is replaced by ONE donated page pool
+    (num_pages, page_size, Hkv, hd) per layer plus per-row block tables:
+    a request consumes only the pages its context needs, admission is
+    gated on free pages (host-side free list + refcounts,
+    serving/paging.py), and a radix prefix cache maps requests sharing a
+    system prompt onto the same physical pages — their shared prefix is
+    never re-prefilled (partial tail pages shared via copy-on-write).
+    Token-for-token equal to the contiguous unified path under
+    non-binding capacity; the donated paged program still contains no
+    pool-sized copy (tests/test_zero_copy.py).
 
 Static-shape serving: the reference path right-pads requests to the slot
 length; the unified path streams chunks through a fixed (max_batch,
@@ -94,6 +106,7 @@ import numpy as np
 
 from repro.core.dynamic_load import LRUExpertTracker
 from repro.models.model import build_model
+from repro.serving.paging import PageAllocator, PrefixCache
 
 Array = jax.Array
 
@@ -140,6 +153,25 @@ class EngineConfig:
     # per-iteration latency a decode token can see.
     token_budget: int = 0
     sample_seed: int = 0          # RNG seed for stochastic decode
+    # Paged KV cache (docs/DESIGN.md §7): replace the contiguous
+    # (max_batch, max_cache) slot-per-request cache with ONE donated page
+    # pool (num_pages, page_size, Hkv, hd) per layer plus per-row block
+    # tables.  A request consumes ceil((prompt + max_new_tokens - 1) /
+    # page_size) pages instead of reserving max_cache slots, admission is
+    # gated on FREE PAGES (a host-side free list + refcounts,
+    # serving/paging.PageAllocator), and a radix prefix cache maps
+    # requests sharing a system prompt onto the same physical pages so
+    # the shared prefix's prefill is skipped entirely (partial tail pages
+    # shared via copy-on-write).  Requires the unified scheduler (paged
+    # mode streams chunks; ring-cache archs keep the reference path).
+    # Token-for-token equal to the contiguous unified path under
+    # non-binding capacity (tests/test_paged_cache.py + CI perf-smoke).
+    paged: bool = False
+    page_size: int = 16           # tokens per page
+    # Pool size in pages; 0 = auto (max_batch * ceil(max_cache /
+    # page_size) — the same token capacity as the contiguous layout, so
+    # paged-vs-contiguous A/Bs run at equal pool bytes).
+    num_pages: int = 0
     # Donate the cache operand of every jit in the hot loop (the JAX
     # analogue of the paper's C1 pre-allocated buffers): the model updates
     # the cache with dynamic_update_slice on a scan *carry*
@@ -201,7 +233,6 @@ class ServingEngine:
         self._all: dict[int, Request] = {}
         self._uid = 0
         b, c = self.ecfg.max_batch, self.ecfg.max_cache
-        self.cache = self.model.init_cache(b, c)
         self.lengths = np.zeros((b,), np.int32)
         self.budgets = np.zeros((b,), np.int32)
         self.last_tok = jnp.zeros((b,), jnp.int32)
@@ -227,6 +258,34 @@ class ServingEngine:
                         and cfg_model.family in ("dense", "moe"))
         # block width: a chunk can never exceed the cache it streams into
         self.chunk_len = min(self.ecfg.chunk_len, self.ecfg.max_cache)
+        # paged KV cache state (EngineConfig.paged; docs/DESIGN.md §7):
+        # one donated page pool + host-side allocator / prefix tree /
+        # per-slot block tables.  The pool replaces the per-slot cache.
+        self.paged = bool(self.ecfg.paged)
+        if self.paged:
+            if not self.unified:
+                raise ValueError(
+                    "paged KV cache requires the unified engine path "
+                    "(token-input attention family, non-ring cache, "
+                    "unified_step=True)")
+            if self.ecfg.page_size < 1:
+                raise ValueError(
+                    f"page_size must be >= 1, got {self.ecfg.page_size}")
+            self.page_size = self.ecfg.page_size
+            self.max_blocks = -(-c // self.page_size)
+            self.num_pages = (self.ecfg.num_pages
+                              or b * self.max_blocks)
+            self.cache = self.model.init_paged_cache(self.num_pages,
+                                                     self.page_size)
+            self.block_tables = np.zeros((b, self.max_blocks), np.int32)
+            self.allocator = PageAllocator(self.num_pages)
+            self.prefix = PrefixCache(self.page_size, self.allocator)
+            self.slot_pages: list[list[int]] = [[] for _ in range(b)]
+            self._jit_copy_pages = jax.jit(
+                self._copy_pages,
+                donate_argnums=(0,) if self.ecfg.donate_buffers else ())
+        else:
+            self.cache = self.model.init_cache(b, c)
         self.prefill_pos = np.zeros((b,), np.int64)
         self.temps = np.zeros((b,), np.float32)
         self.topks = np.zeros((b,), np.int32)
@@ -248,12 +307,21 @@ class ServingEngine:
         self._jit_decode = jax.jit(self._decode, donate_argnums=donate,
                                    static_argnums=(8,))
         self._jit_unified = jax.jit(self._unified, donate_argnums=donate,
-                                    static_argnums=(11,))
+                                    static_argnums=(12,))
         self._sampling = False
         self.stats = {"prefill_tokens": 0, "prefill_pad_tokens": 0,
                       "decode_steps": 0, "decode_tokens": 0,
+                      # per-phase token counts of MIXED iterations only —
+                      # throughput() apportions mixed_s by their share
+                      # (satellite fix: mixed time was double-counted in
+                      # both per-phase denominators)
+                      "mixed_prefill_tokens": 0, "mixed_decode_tokens": 0,
                       "prefill_s": 0.0, "decode_s": 0.0, "mixed_s": 0.0,
-                      "stall_s": 0.0, "harvest_s": 0.0, "harvests": 0}
+                      "stall_s": 0.0, "harvest_s": 0.0, "harvests": 0,
+                      # paged-mode counters (0 when paged=False)
+                      "prefix_lookups": 0, "prefix_hits": 0,
+                      "prefix_hit_tokens": 0, "cow_copies": 0,
+                      "pages_hwm": 0}
 
     # -- jit bodies ---------------------------------------------------------
 
@@ -291,7 +359,8 @@ class ServingEngine:
         return jnp.where(temps > 0, samp, greedy)
 
     def _unified(self, params, cache, tokens, last_tok, lengths, seg_lens,
-                 is_decode, sample_mask, temps, topks, step_idx, sampling):
+                 block_tables, is_decode, sample_mask, temps, topks,
+                 step_idx, sampling):
         """ONE jit program for prefill chunks, decode rows, and any mix.
 
         tokens: (B, chunk_len) host-scheduled block — decode rows take their
@@ -300,16 +369,32 @@ class ServingEngine:
         gives each row's valid-token count at cache offset ``lengths``;
         ``sample_mask`` marks rows whose last valid logit becomes a
         generated token (decode rows and final prefill chunks — mid-prompt
-        chunks keep ``last_tok`` untouched).  Returns (last_tok', cache',
-        routing (L, B*chunk_len, K))."""
+        chunks keep ``last_tok`` untouched).  ``block_tables`` is None on
+        the contiguous cache and the (B, max_blocks) page map on the paged
+        pool (an undonated host snapshot, like ``lengths``).  Returns
+        (last_tok', cache', routing (L, B*chunk_len, K))."""
         tok0 = jnp.where(is_decode, last_tok, tokens[:, 0])
         tokens = jnp.concatenate([tok0[:, None], tokens[:, 1:]], axis=1)
+        # context_len pins the windowing decision to the LOGICAL context
+        # (max_cache) in both layouts: the paged pool's block-table reach
+        # rounds up to whole pages, and letting effective_window() see the
+        # rounded value could flip the long-context SWA variant on in
+        # paged mode but not contiguous — breaking token equality exactly
+        # at ragged page sizes
         logits, cache, routing = self.model.forward_routed(
             params, {"tokens": tokens, "lengths": lengths,
-                     "seg_lens": seg_lens}, cache, self.mesh)
+                     "seg_lens": seg_lens, "block_tables": block_tables},
+            cache, self.mesh, context_len=self.ecfg.max_cache)
         nxt = self._sample_next(logits, temps, topks, step_idx, sampling)
         last_tok = jnp.where(sample_mask, nxt, last_tok)
         return last_tok, cache, routing
+
+    def _copy_pages(self, cache, src, dst):
+        """Device half of copy-on-write (serving/paging): duplicate pool
+        pages ``src`` into ``dst`` across every layer and cache leaf.  The
+        copy moves ``n * page_size`` rows — page-sized traffic, never a
+        pool-sized buffer — and the pool stays donated/aliased."""
+        return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), cache)
 
     def _prefill_batch(self, params, cache, tokens, admit_mask, last_tok,
                        temps, topks, step_idx, sampling):
@@ -415,6 +500,13 @@ class ServingEngine:
                 f"context of {context} tokens + {max_new_tokens} new "
                 f"tokens does not fit the {self.ecfg.max_cache}-slot cache; "
                 f"lower max_new_tokens or raise max_cache")
+        if self.paged:
+            blocks = -(-(context + max_new_tokens - 1) // self.page_size)
+            if blocks > self.num_pages:
+                raise ValueError(
+                    f"request needs {blocks} pages but the pool holds only "
+                    f"{self.num_pages}; raise num_pages or lower "
+                    f"max_new_tokens")
         self._uid += 1
         if temperature > 0:
             self._sampling = True    # one-time retrace with the sampler
@@ -571,7 +663,7 @@ class ServingEngine:
             if self.budgets[i] <= 0:
                 # budget-based completion is host-known at dispatch time:
                 # free the slot now, collect the tokens at the harvest below
-                self.slots[i] = None
+                self._release_slot(i)
                 finishing = True
         if finishing or not self.ecfg.async_steps:
             self._harvest()
@@ -594,6 +686,12 @@ class ServingEngine:
         b, t = self.ecfg.max_batch, self.chunk_len
         for i in range(b):
             if self.slots[i] is None and self.queue:
+                if self.paged:
+                    # page-gated admission: FIFO, stop at the first
+                    # request the pool cannot hold (never skip ahead)
+                    if not self._admit_paged(i):
+                        break
+                    continue
                 req = self.queue.popleft()
                 self.slots[i] = req
                 self.lengths[i] = 0
@@ -635,11 +733,12 @@ class ServingEngine:
             tokens = tokens[:, :1]
         t0 = time.perf_counter()
         step_idx = self._next_step_idx()
-        # lengths/temps/topks snapshots: same deferred-transfer race rule
-        # as the reference decode path (see step())
+        # lengths/temps/topks/block-table snapshots: same deferred-transfer
+        # race rule as the reference decode path (see step())
+        bt = (jnp.asarray(self.block_tables.copy()) if self.paged else None)
         self.last_tok, self.cache, routing = self._jit_unified(
             self.params, self.cache, jnp.asarray(tokens), self.last_tok,
-            jnp.asarray(self.lengths.copy()), jnp.asarray(seg),
+            jnp.asarray(self.lengths.copy()), jnp.asarray(seg), bt,
             jnp.asarray(is_dec), jnp.asarray(sample),
             jnp.asarray(self.temps.copy()), jnp.asarray(self.topks.copy()),
             step_idx, self._sampling)
@@ -650,6 +749,12 @@ class ServingEngine:
                 else "prefill" if not decode_rows else "mixed")
         self.stats[{"decode": "decode_s", "prefill": "prefill_s",
                     "mixed": "mixed_s"}[kind]] += dt
+        if kind == "mixed":
+            # per-phase token counts so throughput() can apportion
+            # mixed_s by token share instead of double-counting it
+            self.stats["mixed_decode_tokens"] += len(decode_rows)
+            self.stats["mixed_prefill_tokens"] += int(
+                sum(int(seg[i]) for i in prefill_rows))
         rows = []
         finishing = False
         for i in decode_rows:
@@ -658,7 +763,7 @@ class ServingEngine:
             self.budgets[i] -= 1
             rows.append((i, i, self.slots[i]))
             if self.budgets[i] <= 0:
-                self.slots[i] = None
+                self._release_slot(i)
                 finishing = True
         if decode_rows:
             self.stats["decode_steps"] += 1
@@ -668,10 +773,14 @@ class ServingEngine:
             self.prefill_pos[i] += n
             self.stats["prefill_tokens"] += n
             if sample[i]:                 # prompt complete: token 1 sampled
+                if self.paged:
+                    # the prompt's pages are final from this dispatch on:
+                    # cache them for prefix reuse BEFORE any release
+                    self._prefix_insert(i)
                 rows.append((i, i, self.slots[i]))
                 self.budgets[i] -= 1
                 if self.budgets[i] <= 0:
-                    self.slots[i] = None
+                    self._release_slot(i)
                     finishing = True
         self._pending.append(_Pending(
             kind, tuple(rows), self.last_tok, routing, b,
@@ -679,6 +788,118 @@ class ServingEngine:
         if finishing or not self.ecfg.async_steps:
             self._harvest()
         return len(decode_rows) + len(prefill_rows)
+
+    # -- paged-cache bookkeeping (EngineConfig.paged; docs/DESIGN.md §7) ----
+
+    def _admit_paged(self, slot: int) -> bool:
+        """Map the queue head into ``slot`` if the page pool can hold its
+        full lifetime: ceil((prompt + max_new_tokens - 1) / page_size)
+        blocks, minus every page shared through the prefix cache.
+        Whole-lifetime upfront allocation keeps decode stall-free — an
+        admitted request can never hit pool OOM mid-generation, so no
+        preemption/swap machinery is needed (lazy per-chunk allocation is
+        the standard refinement once preemption exists).  Returns False
+        with the queue untouched (FIFO preserved) when pages are short
+        even after evicting LRU prefix-cache entries."""
+        req = self.queue[0]
+        ps = self.page_size
+        total_blocks = -(-(len(req.prompt) + req.max_new_tokens - 1) // ps)
+        hit = self.prefix.lookup(req.prompt)
+        need = total_blocks - len(hit.pages)
+        if self.allocator.free_pages < need:
+            # evict only when it can actually close the gap: a request
+            # merely waiting for in-flight pages must NOT drain the tree
+            # (it retries every iteration — unconditional eviction would
+            # destroy the cached system prompt while freeing nothing)
+            if (self.allocator.free_pages + self.prefix.reclaimable_pages()
+                    >= need):
+                self.prefix.evict(need)
+        if self.allocator.free_pages < need:
+            # hand the lookup references back; the request stays queued
+            # (retried next iteration — not counted as a prefix lookup,
+            # so hit-rate stats count requests, not retries)
+            self.allocator.free(hit.pages)
+            if hit.tail_page >= 0:
+                self.allocator.free([hit.tail_page])
+            return False
+        self.stats["prefix_lookups"] += 1
+        new_pages = self.allocator.alloc(need)
+        pages = list(hit.pages) + new_pages
+        if hit.tail_len:
+            # copy-on-write the shared partial tail page: its owner may
+            # still be appending decode tokens to the original, so this
+            # request copies the page (one page-sized device op) and
+            # overwrites the divergent suffix as it writes
+            dst = new_pages[0]
+            self.cache = self._jit_copy_pages(
+                self.cache, jnp.asarray([hit.tail_page], jnp.int32),
+                jnp.asarray([dst], jnp.int32))
+            self.allocator.free([hit.tail_page])   # drop the lookup ref
+            self.stats["cow_copies"] += 1
+        self.queue.popleft()
+        self.slots[slot] = req
+        self.slot_pages[slot] = pages
+        self.block_tables[slot] = 0
+        self.block_tables[slot, :len(pages)] = pages
+        # the shared prefix is already in the cache: prefill starts at
+        # hit.tokens, skipping exactly that much prefill work
+        self.lengths[slot] = hit.tokens
+        self.prefill_pos[slot] = hit.tokens
+        self.budgets[slot] = req.max_new_tokens
+        self.temps[slot] = req.temperature
+        self.topks[slot] = req.top_k
+        if hit.tokens:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += hit.tokens
+        self.stats["pages_hwm"] = max(self.stats["pages_hwm"],
+                                      self.allocator.pages_in_use)
+        return True
+
+    def _release_slot(self, i: int) -> None:
+        """Free slot ``i`` (request complete).  Paged mode releases the
+        request's page references — pages the prefix tree also holds stay
+        resident for future hits; the rest return to the free list."""
+        if self.paged and self.slot_pages[i]:
+            self.allocator.free(self.slot_pages[i])
+            self.slot_pages[i] = []
+            self.block_tables[i] = 0
+        self.slots[i] = None
+
+    def _prefix_insert(self, i: int) -> None:
+        """Record row ``i``'s freshly prefilled prompt in the prefix tree
+        (called when its prefill completes — the pages' contents are final
+        from that dispatch on, in dispatch order).  Full page-aligned
+        chunks become radix nodes; a non-aligned remainder becomes the
+        node's partial-tail record, shareable via copy-on-write."""
+        req = self.slots[i]
+        ps = self.page_size
+        k = len(req.prompt) // ps
+        pages = [int(p) for p in self.block_tables[i, :k]]
+        tail_len = len(req.prompt) - k * ps
+        tail_page = int(self.block_tables[i, k]) if tail_len else -1
+        self.prefix.insert(req.prompt, pages, tail_page, tail_len)
+
+    def paged_stats(self) -> dict:
+        """Page-pool / prefix-cache counters for reporting (launch/serve,
+        benchmarks).  ``{"paged": False}`` on the contiguous cache."""
+        if not self.paged:
+            return {"paged": False}
+        s = self.stats
+        return {
+            "paged": True,
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "pages_in_use": self.allocator.pages_in_use,
+            "pages_hwm": s["pages_hwm"],
+            "pool_utilization": s["pages_hwm"] / self.num_pages,
+            "prefix_lookups": s["prefix_lookups"],
+            "prefix_hits": s["prefix_hits"],
+            "prefix_hit_rate": s["prefix_hits"] / max(s["prefix_lookups"], 1),
+            "prefix_hit_tokens": s["prefix_hit_tokens"],
+            "prefix_cached_pages": self.prefix.cached_pages,
+            "prefix_evictions": self.prefix.evictions,
+            "cow_copies": s["cow_copies"],
+        }
 
     # -- harvest: the only device sync in the loop --------------------------
 
@@ -774,6 +995,13 @@ class ServingEngine:
         rate over all three buckets (unified iterations that mix prefill
         chunks with decode rows land in ``mixed_s``).
 
+        Mixed-iteration time is APPORTIONED between the two per-phase
+        denominators by each phase's token share of those iterations
+        (``mixed_prefill_tokens`` / ``mixed_decode_tokens``) — the
+        satellite fix: charging all of ``mixed_s`` to *both* phases
+        systematically deflated both rates (their reciprocals summed to
+        more than the measured wall time).
+
         ``prefill_tokens`` counts REAL prompt tokens only;
         ``prefill_padding_overhead`` is the fraction of prefill positions
         the reference path spent recomputing padding (0 in unified mode —
@@ -784,11 +1012,14 @@ class ServingEngine:
         s = self.stats
         work_s = s["prefill_s"] + s["decode_s"] + s["mixed_s"]
         pad = s["prefill_pad_tokens"]
+        mp, md = s["mixed_prefill_tokens"], s["mixed_decode_tokens"]
+        p_share = mp / (mp + md) if (mp + md) else 0.0
+        prefill_den = s["prefill_s"] + s["mixed_s"] * p_share
+        decode_den = s["decode_s"] + s["mixed_s"] * (1.0 - p_share)
         return {
-            "prefill_tok_per_s": s["prefill_tokens"] / max(s["prefill_s"]
-                                                           + s["mixed_s"], 1e-9),
-            "decode_tok_per_s": s["decode_tokens"] / max(s["decode_s"]
-                                                         + s["mixed_s"], 1e-9),
+            "prefill_tok_per_s": s["prefill_tokens"] / max(prefill_den,
+                                                           1e-9),
+            "decode_tok_per_s": s["decode_tokens"] / max(decode_den, 1e-9),
             "total_tok_per_s": (s["prefill_tokens"] + s["decode_tokens"])
                                / max(work_s, 1e-9),
             "prefill_padding_overhead": pad / max(pad + s["prefill_tokens"],

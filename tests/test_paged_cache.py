@@ -1,0 +1,547 @@
+"""ISSUE 4 tentpole: paged KV cache, block-table attention, prefix reuse.
+
+Three layers of guarantees (docs/DESIGN.md §7):
+
+  * **model** — ``forward_routed`` over a page pool + block tables is
+    token-for-token equal to the contiguous cache (ragged page sizes that
+    divide neither the prompt nor the cache included), for fp32 and the
+    int8-quantized cache;
+  * **host allocator / prefix tree** — ``serving/paging.py`` invariants:
+    alloc/free/fork/cow never double-free, refcounts return the pool to
+    fully free after every owner releases, lookups cap at
+    ``len(prompt) - 1`` shared tokens, eviction is LRU and respects
+    in-flight references;
+  * **engine** — paged unified mode generates the same tokens as the
+    contiguous unified engine under non-binding capacity, requests
+    sharing a system prompt skip the shared prefix's prefill (prefix-hit
+    accounting), identical prompts share the partial tail page via
+    copy-on-write, and admission is gated on free pages (with LRU
+    prefix-cache eviction under pressure).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:  # requirements-dev.txt; degrade to fixed samples when absent
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.paging import PageAllocator, PrefixCache
+
+MOE_ARCH = "qwen3_moe_30b_a3b"
+DENSE_ARCH = "qwen3_0_6b"
+
+
+def nocap(arch, **kw):
+    return get_config(arch).reduced().replace(capacity_factor=8.0, **kw)
+
+
+def generations(done):
+    return {r.uid: list(r.generated) for r in done}
+
+
+# ---------------------------------------------------------------------------
+# model level: paged forward_routed == contiguous reference
+# ---------------------------------------------------------------------------
+
+def _run_paged_chunks(model, params, toks, page_size, max_cache, chunk):
+    """Stream ``toks`` (B, S) through a paged pool in ``chunk``-token
+    blocks; rows get disjoint page ranges.  Returns (logits, cache, bt)."""
+    b, s = toks.shape
+    nb = -(-max_cache // page_size)
+    cache = model.init_paged_cache(b * nb, page_size)
+    bt = jnp.asarray(np.arange(b * nb).reshape(b, nb), jnp.int32)
+    logits = None
+    for lo in range(0, s, chunk):
+        hi = min(lo + chunk, s)
+        logits, cache, _ = model.forward_routed(
+            params, {"tokens": toks[:, lo:hi],
+                     "lengths": jnp.full((b,), lo, jnp.int32),
+                     "seg_lens": jnp.full((b,), hi - lo, jnp.int32),
+                     "block_tables": bt}, cache)
+    return logits, cache, bt
+
+
+@pytest.mark.parametrize("arch", [MOE_ARCH, DENSE_ARCH])
+@pytest.mark.parametrize("page_size", [5, 8])   # 5 divides neither 8 nor 32
+def test_paged_forward_matches_contiguous(arch, page_size):
+    cfg = nocap(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s, c = 2, 8, 32
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 100, (b, s)),
+                       jnp.int32)
+    logits_r, cache_r, _ = model.prefill_routed(
+        params, {"tokens": toks}, model.init_cache(b, c))
+    for chunk in (3, 8):
+        logits_p, cache_p, bt = _run_paged_chunks(model, params, toks,
+                                                  page_size, c, chunk)
+        v = cfg.vocab_size
+        np.testing.assert_array_equal(
+            np.argmax(np.asarray(logits_r[:, -1, :v]), -1),
+            np.argmax(np.asarray(logits_p[:, :v]), -1))
+        # gathered pages hold the same K as the contiguous cache slots
+        nb = bt.shape[1]
+        kg = np.asarray(cache_p["k"])[:, np.asarray(bt).reshape(-1)].reshape(
+            cfg.num_layers, b, nb * page_size,
+            cfg.num_kv_heads, cfg.head_dim)
+        np.testing.assert_allclose(np.asarray(cache_r["k"])[:, :, :s],
+                                   kg[:, :, :s], atol=1e-5)
+
+
+def test_paged_rows_share_prefix_pages_exactly():
+    """Two rows whose block tables alias the same physical pages for their
+    common prefix attend identical K/V — the mechanism behind prefix-cache
+    reuse, checked at the model level: row 1 maps row 0's prefix pages and
+    only computes its divergent tail, yet its logits equal a full
+    recompute."""
+    cfg = nocap(MOE_ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    ps, nb = 4, 4
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, 100, 8)            # 2 full pages
+    tail_a, tail_b = rng.integers(0, 100, 3), rng.integers(0, 100, 3)
+    pa = np.concatenate([shared, tail_a])
+    pb = np.concatenate([shared, tail_b])
+
+    # reference: each prompt alone through the contiguous cache
+    refs = {}
+    for key, p in (("a", pa), ("b", pb)):
+        lg, _, _ = model.prefill_routed(
+            params, {"tokens": jnp.asarray(p[None], jnp.int32)},
+            model.init_cache(1, nb * ps))
+        refs[key] = int(jnp.argmax(lg[0, -1, :cfg.vocab_size]))
+
+    cache = model.init_paged_cache(8, ps)
+    bt = jnp.asarray([[0, 1, 2, 3], [0, 1, 4, 5]], jnp.int32)  # shared 0,1
+    # row 0 prefills the whole prompt a (writes pages 0,1,2)
+    lg, cache, _ = model.forward_routed(
+        params, {"tokens": jnp.asarray(pa[None], jnp.int32),
+                 "lengths": jnp.zeros((1,), jnp.int32),
+                 "seg_lens": jnp.full((1,), len(pa), jnp.int32),
+                 "block_tables": bt[:1]}, cache)
+    assert int(jnp.argmax(lg[0, :cfg.vocab_size])) == refs["a"]
+    # row 1 maps pages 0,1 and computes ONLY its tail at offset 8
+    blk = jnp.zeros((2, 3), jnp.int32).at[1].set(jnp.asarray(tail_b))
+    lg, cache, _ = model.forward_routed(
+        params, {"tokens": blk,
+                 "lengths": jnp.asarray([0, len(shared)], jnp.int32),
+                 "seg_lens": jnp.asarray([0, 3], jnp.int32),
+                 "block_tables": bt}, cache)
+    assert int(jnp.argmax(lg[1, :cfg.vocab_size])) == refs["b"]
+
+
+def test_int8_unified_block_step_contiguous_and_paged():
+    """Satellite: the int8 cache path under the unified BLOCK step
+    (previously only the decode step was exercised).  Chunked prefill
+    attends the *dequantized* cache while whole-prompt prefill attends
+    full-precision K/V, so later chunks see quantization error the
+    reference does not: the contract is argmax-equal logits plus
+    dequantized caches agreeing within a few quantization quanta — and
+    the paged int8 path must match the contiguous int8 path bit-exactly
+    on the stored quantized values."""
+    cfg = nocap(MOE_ARCH, kv_cache_dtype="int8")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s, c = 2, 8, 32
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 100, (b, s)),
+                       jnp.int32)
+    logits_r, cache_r, _ = model.prefill_routed(
+        params, {"tokens": toks}, model.init_cache(b, c))
+    # contiguous unified block path, ragged chunk
+    cache_u = model.init_cache(b, c)
+    for lo in range(0, s, 3):
+        hi = min(lo + 3, s)
+        logits_u, cache_u, _ = model.forward_routed(
+            params, {"tokens": toks[:, lo:hi],
+                     "lengths": jnp.full((b,), lo, jnp.int32),
+                     "seg_lens": jnp.full((b,), hi - lo, jnp.int32)},
+            cache_u)
+    v = cfg.vocab_size
+    np.testing.assert_array_equal(
+        np.argmax(np.asarray(logits_r[:, -1, :v]), -1),
+        np.argmax(np.asarray(logits_u[:, :v]), -1))
+    dq = lambda cc, sl: (np.asarray(cc["k"])[:, :, :sl].astype(np.float32)
+                         * np.asarray(cc["k_scale"])[:, :, :sl])
+    scale = float(np.asarray(cache_r["k_scale"]).max())
+    np.testing.assert_allclose(dq(cache_r, s), dq(cache_u, s),
+                               atol=4 * scale)
+    assert cache_u["k"].dtype == jnp.int8
+
+    # paged int8 == contiguous int8, bit-exact on the quantized values
+    ps_ = 5
+    logits_p, cache_p, bt = _run_paged_chunks(model, params, toks, ps_, c, 3)
+    np.testing.assert_array_equal(
+        np.argmax(np.asarray(logits_u[:, :v]), -1),
+        np.argmax(np.asarray(logits_p[:, :v]), -1))
+    nb = bt.shape[1]
+    for leaf in ("k", "k_scale", "v", "v_scale"):
+        gathered = np.asarray(cache_p[leaf])[:, np.asarray(bt).reshape(-1)]
+        gathered = gathered.reshape((cfg.num_layers, b, nb * ps_)
+                                    + gathered.shape[3:])
+        np.testing.assert_array_equal(np.asarray(cache_u[leaf])[:, :, :s],
+                                      gathered[:, :, :s])
+
+
+# ---------------------------------------------------------------------------
+# host side: allocator + prefix tree
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_allocator_invariants_under_random_ops(seed):
+    """Property: any interleaving of alloc/free/fork/cow keeps refcounts
+    exactly equal to the number of outstanding owner references, never
+    double-frees, and returns the pool to fully free once every owner
+    releases."""
+    rng = np.random.default_rng(seed)
+    n = 16
+    a = PageAllocator(n)
+    owners: list[list[int]] = []     # each inner list holds one ref/page
+    for _ in range(60):
+        op = int(rng.integers(0, 4))
+        if op == 0:
+            want = int(rng.integers(0, 5))
+            got = a.alloc(want)
+            if got is None:
+                assert a.free_pages < want
+            else:
+                assert len(set(got)) == want
+                owners.append(list(got))
+        elif op == 1 and owners:
+            a.free(owners.pop(int(rng.integers(0, len(owners)))))
+        elif op == 2 and owners:
+            pages = owners[int(rng.integers(0, len(owners)))]
+            a.fork(pages)
+            owners.append(list(pages))
+        elif op == 3 and owners:
+            oi = int(rng.integers(0, len(owners)))
+            if owners[oi]:
+                pi = int(rng.integers(0, len(owners[oi])))
+                page = owners[oi][pi]
+                if a.refcount(page) == 1 or a.free_pages >= 1:
+                    new_page, copied = a.writable(page)
+                    assert copied == (new_page != page)
+                    owners[oi][pi] = new_page
+        # refcount == outstanding owner references, every step
+        for p in range(n):
+            assert a.refcount(p) == sum(o.count(p) for o in owners)
+        assert a.pages_in_use == len({p for o in owners for p in o})
+    for o in owners:
+        a.free(o)
+    assert a.free_pages == n and a.pages_in_use == 0
+
+
+def test_allocator_rejects_double_free_and_bad_fork():
+    a = PageAllocator(4)
+    pages = a.alloc(2)
+    a.free(pages)
+    with pytest.raises(ValueError, match="double free"):
+        a.free([pages[0]])
+    with pytest.raises(ValueError, match="unreferenced"):
+        a.fork([pages[0]])
+    assert a.alloc(5) is None and a.free_pages == 4
+
+
+def test_prefix_cache_lookup_caps_at_prompt_minus_one():
+    """A fully cached prompt still recomputes >= 1 token (the request
+    needs a logit to sample its first generated token from)."""
+    a = PageAllocator(8)
+    pc = PrefixCache(4, a)
+    prompt = np.arange(8, dtype=np.int32)        # exactly 2 pages
+    pages = a.alloc(2)
+    pc.insert(prompt, pages)
+    hit = pc.lookup(prompt)                      # same prompt again
+    assert hit.tokens == 4 and len(hit.pages) == 1   # NOT both pages
+    a.free(hit.pages)
+    # a longer prompt with the same leading pages shares both
+    hit2 = pc.lookup(np.arange(12, dtype=np.int32))
+    assert hit2.tokens == 8 and len(hit2.pages) == 2
+    a.free(hit2.pages)
+
+
+def test_prefix_cache_tail_record_and_first_writer_wins():
+    a = PageAllocator(8)
+    pc = PrefixCache(4, a)
+    prompt = np.arange(6, dtype=np.int32)        # 1 full page + 2-token tail
+    pages = a.alloc(2)
+    pc.insert(prompt, pages[:1], tail_page=pages[1], tail_len=2)
+    assert pc.cached_pages == 2
+    # identical prompt: 4 full-page tokens + 1 usable tail token (cap 5)
+    hit = pc.lookup(prompt)
+    assert hit.tokens == 5 and hit.tail_len == 1 and hit.tail_page == pages[1]
+    a.free(hit.pages)
+    a.free([hit.tail_page])
+    # a second insert of the same content must not replace pages
+    other = a.alloc(2)
+    added = pc.insert(prompt, other[:1], tail_page=other[1], tail_len=2)
+    assert added == 0
+    a.free(other)
+    pc.clear()
+    a.free(pages)
+    assert a.free_pages == 8
+
+
+def test_prefix_cache_clear_does_not_count_as_eviction():
+    """clear() is shutdown / benchmark-warmup housekeeping: reported
+    eviction counts must only ever reflect admission pressure."""
+    a = PageAllocator(4)
+    pc = PrefixCache(2, a)
+    pages = a.alloc(2)
+    pc.insert(np.arange(4, dtype=np.int32), pages)
+    a.free(pages)
+    assert pc.clear() == 2 and pc.evictions == 0 and a.free_pages == 4
+
+
+def test_prefix_cache_reclaimable_counts_only_unpinned_pages():
+    a = PageAllocator(4)
+    pc = PrefixCache(2, a)
+    p1, p2 = a.alloc(1), a.alloc(1)
+    pc.insert(np.array([1, 2], np.int32), p1)
+    pc.insert(np.array([3, 4], np.int32), p2)
+    a.free(p2)                     # p2: tree-only; p1: tree + our ref
+    assert pc.reclaimable_pages() == 1
+    a.free(p1)
+    assert pc.reclaimable_pages() == 2
+
+
+def test_prefix_cache_evicts_lru_and_respects_inflight_refs():
+    a = PageAllocator(4)
+    pc = PrefixCache(2, a)
+    p1, p2 = a.alloc(1), a.alloc(1)
+    pc.insert(np.array([1, 2], np.int32), p1)
+    pc.insert(np.array([3, 4], np.int32), p2)
+    a.free(p1), a.free(p2)                       # only the tree holds them
+    pc.lookup(np.array([1, 2, 9], np.int32))     # touches p1 (newer)
+    a.free(p1)                                   # give lookup ref back
+    pc.evict(3)                                  # need 3 free -> drop LRU p2
+    assert a.free_pages == 3 and pc.evictions == 1
+    assert a.refcount(p2[0]) == 0 and a.refcount(p1[0]) == 1
+    # an in-flight reference keeps an evicted page off the free list
+    hold = pc.lookup(np.array([1, 2, 9], np.int32))
+    assert hold.pages == (p1[0],)
+    pc.evict(4)                                  # tree ref dropped...
+    assert a.free_pages == 3                     # ...but page still held
+    a.free(hold.pages)
+    assert a.free_pages == 4                     # returns at release
+
+
+# ---------------------------------------------------------------------------
+# engine level
+# ---------------------------------------------------------------------------
+
+def _engine(cfg, **kw):
+    eng_kw = dict(max_batch=2, prefill_len=8, max_cache=32,
+                  async_steps=False, chunk_len=3)
+    eng_kw.update(kw)
+    return ServingEngine(cfg, EngineConfig(**eng_kw),
+                         rng=jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("arch", [MOE_ARCH, DENSE_ARCH])
+def test_paged_engine_matches_contiguous_unified(arch):
+    """Paged == contiguous token equality through the full engine, with a
+    page size dividing neither prompts nor max_cache, mixed-length
+    prompts, and a mid-flight arrival (mixed prefill/decode batches)."""
+    cfg = nocap(arch)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 100, n) for n in (8, 5, 8, 7)]
+    outs = {}
+    for name, kw in (("contig", {}), ("paged", dict(paged=True,
+                                                    page_size=5))):
+        eng = _engine(cfg, **kw)
+        eng.submit(prompts[0], max_new_tokens=6)
+        eng.step()
+        eng.step()
+        for p in prompts[1:]:
+            eng.submit(p, max_new_tokens=4)
+        outs[name] = generations(eng.run_until_done())
+    assert outs["paged"] == outs["contig"]
+
+
+def test_paged_engine_async_and_donation_off_are_token_neutral():
+    cfg = nocap(MOE_ARCH)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, 100, 7) for _ in range(3)]
+    outs = []
+    for kw in (dict(), dict(async_steps=True), dict(donate_buffers=False)):
+        eng = _engine(cfg, paged=True, page_size=4, **kw)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5)
+        outs.append(generations(eng.run_until_done()))
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_shared_system_prompt_skips_prefill_via_prefix_hits():
+    """The serving shape the prefix cache exists for: requests sharing a
+    system prompt map their leading blocks to the same pages and skip the
+    shared prefill.  Tokens must equal the contiguous engine (which
+    recomputes everything); skipped work is recorded in
+    ``prefix_hit_tokens`` and the ``prefill_tokens`` gap."""
+    cfg = nocap(MOE_ARCH)
+    rng = np.random.default_rng(7)
+    sysp = rng.integers(0, 100, 13)              # 3 full pages at ps=4
+    prompts = [np.concatenate([sysp, rng.integers(0, 100, 6)])
+               for _ in range(3)]
+
+    def run(**kw):
+        eng = _engine(cfg, prefill_len=32, chunk_len=4, **kw)
+        for p in prompts:                        # sequential completions
+            eng.submit(p, max_new_tokens=4)
+            eng.run_until_done()
+        return generations(eng._all.values()), eng
+
+    ref, eng_c = run()
+    pag, eng_p = run(paged=True, page_size=4)
+    assert pag == ref
+    ps = eng_p.paged_stats()
+    aligned = (len(sysp) // 4) * 4               # 12 page-aligned tokens
+    assert ps["prefix_hits"] == 2                # both followers hit
+    assert ps["prefix_hit_tokens"] >= 2 * aligned
+    assert ps["prefix_hit_tokens"] >= len(sysp)  # acceptance criterion
+    assert (eng_c.stats["prefill_tokens"] - eng_p.stats["prefill_tokens"]
+            == ps["prefix_hit_tokens"])
+
+
+def test_identical_prompts_share_partial_tail_page_via_cow():
+    """A repeat of an exact prompt shares its partial tail page too: the
+    sharer copies the page (copy-on-write — the owner may still be
+    appending decode tokens to the original) and recomputes only the final
+    prompt token."""
+    cfg = nocap(MOE_ARCH)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, 100, 10)            # ps=4: 2 pages + 2 tail
+
+    def run(**kw):
+        eng = _engine(cfg, prefill_len=32, chunk_len=4, **kw)
+        for _ in range(2):
+            eng.submit(prompt, max_new_tokens=4)
+            eng.run_until_done()
+        return generations(eng._all.values()), eng
+
+    ref, _ = run()
+    pag, eng = run(paged=True, page_size=4)
+    assert pag == ref
+    s = eng.paged_stats()
+    assert s["cow_copies"] == 1
+    # 8 full-page tokens + 1 tail token (cap at len-1 = 9)
+    assert s["prefix_hit_tokens"] == 9
+
+
+def test_admission_gated_on_free_pages_with_eviction():
+    """A pool too small for two concurrent requests admits them one at a
+    time (FIFO, no deadlock), evicting LRU prefix-cache pages under
+    pressure — and still completes everything with the right tokens."""
+    cfg = nocap(MOE_ARCH)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, 100, 8) for _ in range(3)]
+    ref_eng = _engine(cfg)
+    for p in prompts:
+        ref_eng.submit(p, max_new_tokens=5)
+    ref = generations(ref_eng.run_until_done())
+
+    # 4 pages of 4 tokens: one request needs ceil((8+5-1)/4) = 3 pages,
+    # so only one fits at a time and every completion's cached pages must
+    # be evicted to admit the next
+    eng = _engine(cfg, paged=True, page_size=4, num_pages=4)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    got = generations(eng.run_until_done())
+    assert got == ref
+    s = eng.paged_stats()
+    assert s["prefix_evictions"] > 0
+    assert s["pages_hwm"] <= 4
+
+
+def test_waiting_request_neither_drains_tree_nor_inflates_lookups():
+    """A queued request that merely has to wait for in-flight pages must
+    NOT evict the prefix cache on every retry (eviction cannot free
+    pinned pages) and must count as ONE prefix lookup when admitted, not
+    one per scheduler iteration — hit-rate stats count requests."""
+    cfg = nocap(MOE_ARCH)
+    rng = np.random.default_rng(21)
+    eng = _engine(cfg, paged=True, page_size=4, num_pages=6, chunk_len=8)
+    eng.submit(rng.integers(0, 100, 8), max_new_tokens=5)   # 3 pages
+    eng.run_until_done()
+    assert eng.prefix.cached_pages == 2                     # R1 cached
+    eng.submit(rng.integers(0, 100, 8), max_new_tokens=9)   # 4 pages
+    eng.step()                                              # R2 admitted
+    eng.submit(rng.integers(0, 100, 8), max_new_tokens=5)   # needs 3
+    for _ in range(3):                                      # R3 must wait:
+        eng.step()                  # free 0 + reclaimable 2 < need 3
+    assert eng.slots.count(None) == 1 and len(eng.queue) == 1
+    # tree intact: R1's 2 cached pages survive, plus R2's own prefill
+    # insert (its pages are pinned, so reclaimable stays 2 < need 3)
+    assert eng.prefix.cached_pages == 4
+    assert eng.prefix.reclaimable_pages() == 2
+    assert eng.prefix.evictions == 0
+    assert eng.stats["prefix_lookups"] == 2                 # R1, R2 only
+    done = eng.run_until_done()
+    assert len(done) == 3                                   # R3 admitted
+    assert eng.stats["prefix_lookups"] == 3
+
+
+def test_equal_pool_bytes_admit_more_concurrent_requests():
+    """The capacity story: at the contiguous layout's pool bytes
+    (max_batch * max_cache tokens), short requests leave most of a
+    contiguous row's reservation unused — the paged engine admits more
+    rows concurrently from the same bytes."""
+    cfg = nocap(MOE_ARCH)
+    rng = np.random.default_rng(13)
+    # contiguous baseline: 2 rows x 32 slots = 64 token slots
+    # paged at the same bytes: 16 pages x 4 tokens; a (5 prompt + 3 new)
+    # request needs ceil(7/4) = 2 pages -> 4 concurrent rows fit twice over
+    eng = ServingEngine(cfg, EngineConfig(
+        max_batch=4, prefill_len=8, max_cache=32, async_steps=False,
+        chunk_len=4, paged=True, page_size=4, num_pages=16),
+        rng=jax.random.PRNGKey(0))
+    for _ in range(4):
+        eng.submit(rng.integers(0, 100, 5), max_new_tokens=3)
+    eng.step()
+    assert sum(r is not None for r in eng.slots) == 4   # all concurrent
+    assert eng.allocator.pages_in_use == 8              # half the pool
+    done = eng.run_until_done()
+    assert len(done) == 4
+
+
+def test_paged_requires_unified_and_validates_pool():
+    cfg = nocap(MOE_ARCH)
+    with pytest.raises(ValueError, match="unified"):
+        ServingEngine(cfg, EngineConfig(max_batch=2, prefill_len=8,
+                                        max_cache=32, unified_step=False,
+                                        paged=True))
+    with pytest.raises(ValueError, match="page_size"):
+        ServingEngine(cfg, EngineConfig(max_batch=2, prefill_len=8,
+                                        max_cache=32, paged=True,
+                                        page_size=0))
+    eng = _engine(cfg, paged=True, page_size=4, num_pages=2)
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(np.arange(8), max_new_tokens=5)      # needs 3 > 2 pages
+
+
+def test_throughput_apportions_mixed_time_by_token_share():
+    """Satellite fix: per-phase times must PARTITION the measured work
+    time — reciprocals of the two rates weighted by token counts sum to
+    prefill_s + decode_s + mixed_s, instead of double-charging mixed_s to
+    both phases."""
+    cfg = nocap(MOE_ARCH)
+    eng = _engine(cfg, chunk_len=4)
+    rng = np.random.default_rng(15)
+    eng.submit(rng.integers(0, 100, 8), max_new_tokens=8)
+    eng.step()
+    eng.step()
+    eng.submit(rng.integers(0, 100, 8), max_new_tokens=4)  # mixed iters
+    eng.run_until_done()
+    s = eng.stats
+    assert s["mixed_s"] > 0.0 and s["mixed_prefill_tokens"] > 0
+    assert s["mixed_decode_tokens"] > 0
+    tp = eng.throughput()
+    work = s["prefill_s"] + s["decode_s"] + s["mixed_s"]
+    recon = (s["prefill_tokens"] / tp["prefill_tok_per_s"]
+             + s["decode_tokens"] / tp["decode_tok_per_s"])
+    assert recon == pytest.approx(work, rel=1e-6)

@@ -158,3 +158,74 @@ def test_chunked_prefill_ttft_tradeoff():
     # one whole-prompt chunk == a single mixed iteration of that size
     assert ttfts[0] == pm.mixed_step_estimate(
         w, hw, 2, decode_rows=0, chunk_len=256).total
+
+
+def test_kv_bytes_per_token_matches_cache_leaves():
+    """The memory-capacity term's bytes/token must equal the real cache
+    allocation (contiguous AND paged layouts allocate the same bytes per
+    token slot; int8 adds the per-(token, head) fp32 scales)."""
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models.model import build_model
+
+    for kvd in ("native", "int8"):
+        cfg = get_config("qwen3_moe_30b_a3b").reduced().replace(
+            kv_cache_dtype=kvd)
+        model = build_model(cfg)
+        cache = model.init_cache(2, 16)
+        nbytes = sum(a.size * a.dtype.itemsize
+                     for a in jax.tree.leaves(cache))
+        per_tok = pm.kv_bytes_per_token(cfg, precision=4)  # reduced = fp32
+        assert per_tok == nbytes / (2 * 16)
+        paged = model.init_paged_cache(8, 4)               # same 32 slots
+        assert sum(a.size * a.dtype.itemsize
+                   for a in jax.tree.leaves(paged)) == nbytes
+
+
+def test_paged_concurrency_beats_contiguous_at_equal_pool_bytes():
+    """ISSUE 4 memory-capacity term: at the paper's Table-2 unified-memory
+    budget, the contiguous layout reserves max_cache slots per request
+    while the paged layout reserves only page-rounded real context — more
+    concurrent requests from the same bytes whenever contexts run short of
+    max_cache."""
+    bpt = pm.kv_bytes_per_token(n_layers=40, num_kv_heads=8, head_dim=128)
+    pool = 0.25 * pm.M2_ULTRA_MEM_BYTES        # cache's share of 192 GB
+    contiguous = pm.max_concurrent_requests(pool, bpt, mean_context=512,
+                                            slot_len=4096)
+    paged = pm.max_concurrent_requests(pool, bpt, mean_context=512,
+                                       page_size=16)
+    # ~8x (= 4096 / 512) up to the integer floor on each side
+    assert 8 * contiguous <= paged <= 8 * (contiguous + 1)
+    # page rounding only costs the tail page
+    assert pm.max_concurrent_requests(pool, bpt, 510, page_size=16) == paged
+    # at full-length contexts the two layouts converge
+    assert pm.max_concurrent_requests(pool, bpt, 4096, page_size=16) \
+        == contiguous
+    cap = pm.serving_capacity(
+        type("C", (), {"num_layers": 40, "num_kv_heads": 8, "head_dim": 128,
+                       "kv_cache_dtype": "native"})(),
+        pool_bytes=pool, max_cache=4096, mean_context=512, page_size=16)
+    assert cap["paged"] > cap["contiguous"]
+    assert cap["gain"] == pytest.approx(8.0, rel=0.02)
+
+
+def test_prefix_hit_ttft_skips_shared_pages_only():
+    """Prefix hits shave exactly the page-aligned shared prefix off the
+    modelled TTFT; a full-prompt hit still recomputes one token."""
+    w, hw = pm.DBRX_TABLE1, pm.M2_ULTRA_10GBE
+    base = pm.prefix_hit_ttft(w, hw, 2, prompt_len=256, shared_len=0,
+                              chunk_len=64)
+    assert base == pm.chunked_prefill_ttft(w, hw, 2, 256, 64)
+    hit = pm.prefix_hit_ttft(w, hw, 2, prompt_len=256, shared_len=192,
+                             chunk_len=64, page_size=16)
+    assert hit < base
+    assert hit == pm.chunked_prefill_ttft(w, hw, 2, 64, 64)
+    # non-aligned shared length rounds DOWN to whole pages
+    ragged = pm.prefix_hit_ttft(w, hw, 2, prompt_len=256, shared_len=200,
+                                chunk_len=64, page_size=16)
+    assert ragged == pm.chunked_prefill_ttft(w, hw, 2, 256 - 192, 64)
+    # a fully-shared prompt still pays for >= 1 recomputed token
+    full = pm.prefix_hit_ttft(w, hw, 2, prompt_len=256, shared_len=256,
+                              chunk_len=64, page_size=1)
+    assert full == pm.chunked_prefill_ttft(w, hw, 2, 1, 64)

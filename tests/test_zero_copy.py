@@ -43,14 +43,16 @@ def leaf_bytes(leaves):
     return [int(np.prod(a.shape)) * a.dtype.itemsize for a in leaves]
 
 
-def compiled_unified(arch, donate, chunk_len=4, **cfg_kw):
-    """Compile the engine's unified mixed-batch jit (ISSUE 3); returns
-    (hlo_text, cache leaves)."""
+def compiled_unified(arch, donate, chunk_len=4, paged=False, page_size=8,
+                     **cfg_kw):
+    """Compile the engine's unified mixed-batch jit (ISSUE 3; ISSUE 4 with
+    ``paged=True``); returns (hlo_text, cache leaves)."""
     cfg = get_config(arch).reduced().replace(**cfg_kw)
     eng = ServingEngine(cfg, EngineConfig(max_batch=2, prefill_len=8,
                                           max_cache=32, unified_step=True,
                                           chunk_len=chunk_len,
-                                          donate_buffers=donate))
+                                          donate_buffers=donate,
+                                          paged=paged, page_size=page_size))
     sds = lambda t: jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
     ivec = jax.ShapeDtypeStruct((2,), jnp.int32)
@@ -58,8 +60,10 @@ def compiled_unified(arch, donate, chunk_len=4, **cfg_kw):
     fvec = jax.ShapeDtypeStruct((2,), jnp.float32)
     toks = jax.ShapeDtypeStruct((2, chunk_len), jnp.int32)
     step = jax.ShapeDtypeStruct((), jnp.int32)
+    bt = (jax.ShapeDtypeStruct((2, eng.max_blocks), jnp.int32)
+          if paged else None)
     txt = eng._jit_unified.lower(
-        sds(eng.params), sds(eng.cache), toks, ivec, ivec, ivec,
+        sds(eng.params), sds(eng.cache), toks, ivec, ivec, ivec, bt,
         bvec, bvec, fvec, ivec, step, False).compile().as_text()
     return txt, jax.tree.leaves(eng.cache)
 
@@ -116,6 +120,55 @@ def test_donated_unified_step_production_config_never_copies_cache_leaf():
                  if c[1] in sizes]
     assert offending == [], offending
     assert hlo.input_output_aliases(txt) >= len(leaves)
+
+
+@pytest.mark.parametrize("arch,kw", [
+    (MOE_ARCH, dict(gather_decode_max_tk=0)),
+    (DENSE_ARCH, dict()),
+])
+def test_donated_paged_step_has_no_pool_sized_copy(arch, kw):
+    """ISSUE 4 tentpole pin: the paged unified program writes K/V via an
+    in-place scatter on the scan-carry pool and reads it via block-table
+    gathers — the donated program must contain NO pool-sized copy op (the
+    gather's (B, NB*ps, Hkv, hd) result is a gather, not a copy, and is
+    bounded by the per-row logical cache, exactly what the contiguous
+    attention read)."""
+    txt, leaves = compiled_unified(arch, donate=True, paged=True,
+                                   page_size=8, **kw)
+    min_leaf = min(leaf_bytes(leaves))
+    copies = hlo.sized_copies(txt, min_leaf)
+    assert copies == [], copies
+    assert hlo.input_output_aliases(txt) >= len(leaves)
+
+
+def test_donated_paged_step_production_config_never_copies_cache_leaf():
+    """Production MoE paged config (gather fast path may engage): no copy
+    of a pool leaf's exact size, every leaf aliased to its donated
+    input."""
+    txt, leaves = compiled_unified(MOE_ARCH, donate=True, paged=True,
+                                   page_size=8)
+    sizes = set(leaf_bytes(leaves))
+    offending = [c for c in hlo.sized_copies(txt, min(sizes))
+                 if c[1] in sizes]
+    assert offending == [], offending
+    assert hlo.input_output_aliases(txt) >= len(leaves)
+
+
+def test_paged_cow_page_copy_is_page_sized_not_pool_sized():
+    """The copy-on-write helper may copy exactly one page worth of rows
+    per leaf — never a pool-sized buffer."""
+    cfg = get_config(MOE_ARCH).reduced()
+    eng = ServingEngine(cfg, EngineConfig(max_batch=2, prefill_len=8,
+                                          max_cache=32, paged=True,
+                                          page_size=8))
+    sds = lambda t: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    one = jax.ShapeDtypeStruct((1,), jnp.int32)
+    txt = eng._jit_copy_pages.lower(sds(eng.cache), one,
+                                    one).compile().as_text()
+    leaves = jax.tree.leaves(eng.cache)
+    min_leaf = min(leaf_bytes(leaves))
+    assert hlo.sized_copies(txt, min_leaf) == []
 
 
 def test_undonated_decode_copies_the_cache():
