@@ -27,6 +27,16 @@ Compares, on identical params / requests / config:
     prefix-hit tokens >= the shared length and on the hit tokens exactly
     explaining the prefill-token gap vs the contiguous engine.
 
+A quantized-weight-store round (``run_quant_ab``, skip with
+``--skip-quant``; PR 5, docs/DESIGN.md §8) A/Bs the unified engine at
+``weight_quant`` none vs int8 on wall tok/s and reported device weight
+bytes.  Two gates: (a) the int8 store is argmax-token-IDENTICAL to the
+fake-quant fp reference (an engine serving the pre-dequantized weights as
+raw arrays — the machinery-correctness gate; raw-fp equality is NOT a
+sound gate because int8 rounding shifts logits ~1e-2, far above greedy
+tie gaps, so the raw-fp token agreement is *reported* instead), and
+(b) weight bytes shrink >= 3.5x at int8-with-fp-router.
+
 A staggered-arrival round (``run_staggered``, skip with
 ``--skip-staggered``) A/Bs the two-program reference against the unified
 scheduler on TTFT p50/p95 and decode-stall time — the latency metrics the
@@ -234,6 +244,76 @@ def run_shared_prefix(cfg, *, requests, new_tokens, prompt_len, max_batch,
     return out
 
 
+def run_quant_ab(base_cfg, *, requests, new_tokens, prompt_len, max_batch,
+                 chunk_len, repeat=1, seed=0):
+    """Quantized weight store A/B (PR 5 acceptance): the unified engine at
+    ``weight_quant='none'`` vs ``'int8'`` vs the fake-quant fp reference
+    (raw params pre-dequantized from the int8 store).  Identical raw init
+    params everywhere (same rng).  Gates: int8 == fake-quant reference
+    token-for-token (the store's machinery is argmax-exact), and reported
+    weight bytes shrink >= 3.5x.  Raw-fp agreement is reported, not gated
+    — int8 rounding legitimately flips near-tie greedy tokens."""
+    import jax as _jax
+
+    from repro.core import quant
+    from repro.models.model import build_model
+
+    kw = dict(batched_prefill=True, async_steps=True, donate_buffers=True,
+              unified_step=True)
+    raw_params = build_model(base_cfg).init(_jax.random.PRNGKey(0))
+    qcfg = base_cfg.replace(weight_quant="int8")
+    ref_params = quant.dequantize_tree(quant.quantize_params(raw_params,
+                                                             qcfg))
+    runs = {"fp": (base_cfg, raw_params), "int8": (qcfg, raw_params),
+            "int8-ref": (base_cfg, ref_params)}
+    out = {}
+    reps: dict[str, list] = {name: [] for name in runs}
+    for _ in range(max(repeat, 1)):
+        for name, (cfg, params) in runs.items():
+            eng = ServingEngine(cfg, EngineConfig(
+                max_batch=max_batch, prefill_len=prompt_len,
+                max_cache=prompt_len + new_tokens + 8,
+                chunk_len=chunk_len, **kw), params=params)
+            rng = np.random.default_rng(seed)
+            prompts = [rng.integers(0, cfg.vocab_size, prompt_len)
+                       for _ in range(requests)]
+            eng.submit(prompts[0], max_new_tokens=2)      # compile warmup
+            eng.run_until_done()
+            for k in eng.stats:
+                eng.stats[k] = type(eng.stats[k])()
+            t0 = time.perf_counter()
+            for p in prompts:
+                eng.submit(p, max_new_tokens=new_tokens)
+            done = eng.run_until_done()
+            wall = time.perf_counter() - t0
+            reps[name].append({
+                "wall_s": wall,
+                "tok_per_s_wall": requests * (prompt_len + new_tokens) / wall,
+                "memory": eng.memory_stats(),
+                "generated": {r.uid: list(r.generated) for r in done},
+            })
+            assert reps[name][-1]["generated"] == reps[name][0]["generated"]
+    for name in runs:
+        out[name] = min(reps[name], key=lambda r: r["wall_s"])
+    gens = {k: r.pop("generated") for k, r in out.items()}
+    # gate (a): the quantized store is argmax-token-identical to the
+    # fake-quant fp reference — every piece of PR-5 machinery (packing,
+    # scales, qdot, scan slicing, engine plumbing, donation) is exact
+    assert gens["int8"] == gens["int8-ref"], \
+        "int8 store diverged from the fake-quant fp reference"
+    # raw-fp agreement: reported honestly, never gated
+    flat = lambda g: [t for uid in sorted(g) for t in g[uid]]
+    a, b = flat(gens["int8"]), flat(gens["fp"])
+    agree = sum(x == y for x, y in zip(a, b)) / max(len(a), 1)
+    out["raw_fp_token_agreement"] = agree
+    # gate (b): reported weight bytes shrink >= 3.5x (int8, fp router)
+    ratio = (out["fp"]["memory"]["weight_bytes"]
+             / out["int8"]["memory"]["weight_bytes"])
+    out["weight_bytes_ratio"] = ratio
+    assert ratio >= 3.5, f"int8 weight-bytes shrink {ratio:.2f}x < 3.5x"
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_moe_30b_a3b")
@@ -265,6 +345,9 @@ def main():
                     help="staggered workload: iterations between arrivals")
     ap.add_argument("--skip-staggered", action="store_true",
                     help="skip the staggered-arrival TTFT/stall A/B round")
+    ap.add_argument("--skip-quant", action="store_true",
+                    help="skip the quantized-weight-store A/B round "
+                         "(fp vs int8 tok/s + weight bytes, PR 5 gates)")
     args = ap.parse_args()
     if args.shared_prefix_len >= args.prompt_len:
         ap.error("--shared-prefix-len must be < --prompt-len")
@@ -414,6 +497,28 @@ def main():
               f"{r.get('prefix_hit_rate', 0.0):.0%}"]
              for sname, r in shared.items()]))
         results["shared_prefix"] = shared
+
+    # quantized weight store A/B (PR 5): fp vs int8 vs fake-quant
+    # reference — argmax parity + >=3.5x weight-bytes shrink gated inside
+    quant_ab = {}
+    if not args.skip_quant:
+        quant_ab = run_quant_ab(
+            base_cfg, requests=args.requests, new_tokens=args.new_tokens,
+            prompt_len=args.prompt_len, max_batch=args.max_batch,
+            chunk_len=args.chunk_len, repeat=args.repeat)
+        print(f"\nquantized weight store (unified engine, "
+              f"block={base_cfg.weight_quant_block}):")
+        print(markdown_table(
+            ["mode", "wall s", "tok/s (wall)", "weight MB"],
+            [[nm, f"{quant_ab[nm]['wall_s']:.2f}",
+              f"{quant_ab[nm]['tok_per_s_wall']:.1f}",
+              f"{quant_ab[nm]['memory']['weight_bytes'] / 1e6:.2f}"]
+             for nm in ("fp", "int8", "int8-ref")]))
+        print(f"weight bytes fp/int8: {quant_ab['weight_bytes_ratio']:.2f}x"
+              f"  raw-fp token agreement: "
+              f"{quant_ab['raw_fp_token_agreement']:.1%}  "
+              f"(int8 == fake-quant reference: gated exact)")
+        results["quant_ab"] = quant_ab
     path = save_result("serving_engine", results)
     print(f"saved {path}")
 
@@ -443,6 +548,16 @@ def main():
         bench["staggered_ab"] = staggered
     if shared:
         bench["shared_prefix_ab"] = shared
+    if quant_ab:
+        bench["quant_ab"] = {
+            "tok_per_s_wall": {nm: quant_ab[nm]["tok_per_s_wall"]
+                               for nm in ("fp", "int8", "int8-ref")},
+            "weight_bytes": {nm: quant_ab[nm]["memory"]["weight_bytes"]
+                             for nm in ("fp", "int8", "int8-ref")},
+            "weight_bytes_ratio": quant_ab["weight_bytes_ratio"],
+            "raw_fp_token_agreement": quant_ab["raw_fp_token_agreement"],
+            "weight_quant_block": base_cfg.weight_quant_block,
+        }
     if args.note:
         bench["note"] = args.note
     with open(BENCH_JSON, "w") as f:

@@ -4,7 +4,14 @@ The converter is the TPU analogue of the paper's one-time preprocessing
 script (§4.1): it takes an *unstacked* checkpoint (one entry per layer /
 per expert, the naive layout) and rewrites it into the canonical
 *prestacked* layout — one contiguous array per weight kind with leading
-(L[, E]) axes — including granite-style expert padding.
+(L[, E]) axes — including granite-style expert padding.  With
+``weight_quant`` it ALSO quantizes eligible weight kinds into the
+blockwise QuantTensor store (docs/DESIGN.md §8) in the same one-time
+pass, so serving restores ready-to-run compressed weights.
+
+QuantTensor leaves round-trip through the flat npz format as three sibling
+entries (``<key>//__qt_data__``, ``//__qt_scale__``, ``//__qt_meta__``) —
+payload, scales, and the static quantization metadata.
 """
 from __future__ import annotations
 
@@ -15,16 +22,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import prestack
+from repro.core import prestack, quant
 
 SEP = "//"
+
+_QT_DATA, _QT_SCALE, _QT_META = "__qt_data__", "__qt_scale__", "__qt_meta__"
+# dtypes a QuantTensor may dequantize to, indexed by the meta record
+_QT_DTYPES = ("float32", "bfloat16", "float16", "float64")
 
 
 def flatten_tree(tree) -> dict:
     flat = {}
 
     def rec(t, path):
-        if isinstance(t, dict):
+        if isinstance(t, quant.QuantTensor):
+            flat[SEP.join(path + [_QT_DATA])] = t.data
+            flat[SEP.join(path + [_QT_SCALE])] = t.scale
+            flat[SEP.join(path + [_QT_META])] = np.asarray(
+                [t.bits, t.block, t.orig_dim,
+                 _QT_DTYPES.index(t.out_dtype)], np.int64)
+        elif isinstance(t, dict):
             for k in sorted(t):
                 rec(t[k], path + [str(k)])
         else:
@@ -42,7 +59,19 @@ def unflatten_tree(flat: dict) -> dict:
         for p in parts[:-1]:
             node = node.setdefault(p, {})
         node[parts[-1]] = v
-    return tree
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        if _QT_DATA in node:
+            meta = np.asarray(node[_QT_META])
+            return quant.QuantTensor(
+                jnp.asarray(node[_QT_DATA]), jnp.asarray(node[_QT_SCALE]),
+                int(meta[0]), int(meta[1]), int(meta[2]),
+                _QT_DTYPES[int(meta[3])])
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(tree)
 
 
 def save(path: str, params, step: int = 0) -> None:
@@ -56,7 +85,9 @@ def restore(path: str) -> tuple[dict, int]:
     with np.load(path if path.endswith(".npz") else path + ".npz") as z:
         flat = {k: z[k] for k in z.files if k != "__step__"}
         step = int(z["__step__"]) if "__step__" in z.files else 0
-    return unflatten_tree({k: jnp.asarray(v) for k, v in flat.items()}), step
+    flat = {k: (v if k.endswith(_QT_META) else jnp.asarray(v))
+            for k, v in flat.items()}
+    return unflatten_tree(flat), step
 
 
 # ---------------------------------------------------------------------------
@@ -67,10 +98,18 @@ _LAYER_RE = re.compile(r"^layer_(\d+)$")
 _EXPERT_RE = re.compile(r"^expert_(\d+)$")
 
 
-def convert_unstacked(unstacked: dict, num_experts_padded: int = 0) -> dict:
+def convert_unstacked(unstacked: dict, num_experts_padded: int = 0,
+                      weight_quant: str = "none",
+                      weight_quant_block: int = 128,
+                      weight_quant_kinds: tuple = quant.DEFAULT_KINDS) -> dict:
     """{"layer_0": {...}, "layer_1": {...}} -> prestacked tree with a leading
     L axis; inside each layer an optional {"expert_<i>": {...}} level is
     stacked into a leading E axis and zero-padded to ``num_experts_padded``.
+
+    ``weight_quant`` extends the one-time preprocessing with the blockwise
+    weight store (docs/DESIGN.md §8): after stacking, eligible weight
+    kinds are quantized into QuantTensor leaves — the quantize-on-load
+    pipeline shares one pass with the paper's prestacking script.
     """
     layer_keys = sorted((k for k in unstacked if _LAYER_RE.match(k)),
                         key=lambda k: int(_LAYER_RE.match(k).group(1)))
@@ -88,8 +127,11 @@ def convert_unstacked(unstacked: dict, num_experts_padded: int = 0) -> dict:
         rest = {k: v for k, v in layer.items() if k not in e_keys}
         return {**rest, "experts": experts}
 
-    return prestack.stack_blocks([stack_layer(unstacked[k])
-                                  for k in layer_keys])
+    blocks = prestack.stack_blocks([stack_layer(unstacked[k])
+                                    for k in layer_keys])
+    return prestack.quantize_blocks(blocks, weight_quant,
+                                    block=weight_quant_block,
+                                    kinds=weight_quant_kinds)
 
 
 def to_unstacked(blocks, num_layers: int) -> dict:
@@ -97,3 +139,11 @@ def to_unstacked(blocks, num_layers: int) -> dict:
     baseline benchmark."""
     return {f"layer_{i}": layer
             for i, layer in enumerate(prestack.unstack_blocks(blocks))}
+
+
+def quantize_on_load(path: str, cfg) -> tuple[dict, int]:
+    """Restore a checkpoint and apply ``cfg.weight_quant`` — the serving
+    loader's one-time preprocessing (idempotent: checkpoints saved already
+    quantized restore as QuantTensor leaves and pass through)."""
+    params, step = restore(path)
+    return quant.quantize_params(params, cfg), step

@@ -97,6 +97,18 @@ class ModelConfig:
     vocab_pad: int = 256
     kv_cache_shard: str = "seq"             # seq (CP decode) | hd | kv | none
     kv_cache_dtype: str = "native"          # native | int8 (quantized cache)
+    # blockwise quantized weight store (core/quant.py, docs/DESIGN.md §8):
+    # none | int8 | int4.  Weights of the kinds listed in
+    # ``weight_quant_kinds`` become QuantTensor pytree leaves (int8 or
+    # packed-int4 payload + per-``weight_quant_block`` fp32 scales over the
+    # reduction axis) at load time (ckpt/io.py, serving/engine.py); every
+    # matmul site goes through core/quant.qdot, so raw and quantized
+    # params are interchangeable.  The router and embedding stay fp by
+    # default (the per-kind override: shrink what dominates memory, keep
+    # the precision-sensitive tiny matrices exact).
+    weight_quant: str = "none"
+    weight_quant_block: int = 128
+    weight_quant_kinds: tuple = ("attn", "mlp", "experts", "lm_head")
     source: str = ""                 # citation
 
     # -- derived ----------------------------------------------------------

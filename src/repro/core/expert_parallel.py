@@ -29,6 +29,14 @@ decode), ``centralized`` degrades to psum + a value-preserving ring
 ``ppermute`` so the *second* communication of the centralized design is
 still present in the lowered HLO (cost-faithful; values unchanged), and
 both a2a schedules fall back to ``decentralized``.
+
+Quantized expert shards (core/quant.QuantTensor leaves, docs/DESIGN.md §8)
+ride every schedule unchanged: the int8/int4 payload and its per-block
+scales are sibling rank-3 leaves sharing the leading expert axis, so
+``_expert_specs``'s rank-3 PartitionSpecs broadcast over both and the
+shard_map bodies receive local QuantTensor shards.  Activations stay fp —
+dispatch/combine collectives move fp activations only; dequantization
+happens at the expert FFN's ``qdot`` policy point (core/moe.expert_ffn).
 """
 from __future__ import annotations
 

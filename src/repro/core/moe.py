@@ -22,6 +22,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
+
 Array = jax.Array
 
 
@@ -37,17 +39,20 @@ def expert_ffn(experts: dict, xe: Array, use_kernel: bool = False) -> Array:
 
     ``use_kernel`` selects the Pallas prestacked grouped-GEMM kernel
     (kernels/moe_gemm.py); default is the pure-jnp path (also the oracle).
+    Expert weights may be raw arrays or blockwise-quantized QuantTensors
+    (docs/DESIGN.md §8) — the jnp path dequantizes through the ``qdot``
+    policy point, the kernel path dequantizes tiles in-VMEM.
     """
     if use_kernel:
         from repro.kernels import ops
         return ops.moe_ffn(xe, experts["w_gate"], experts["w_up"],
                            experts["w_down"])
-    g = jnp.einsum("ecd,edf->ecf", xe, experts["w_gate"],
+    g = quant.qdot("ecd,edf->ecf", xe, experts["w_gate"],
                    preferred_element_type=jnp.float32)
-    u = jnp.einsum("ecd,edf->ecf", xe, experts["w_up"],
+    u = quant.qdot("ecd,edf->ecf", xe, experts["w_up"],
                    preferred_element_type=jnp.float32)
     h = (jax.nn.silu(g) * u).astype(xe.dtype)
-    return jnp.einsum("ecf,efd->ecd", h, experts["w_down"],
+    return quant.qdot("ecf,efd->ecd", h, experts["w_down"],
                       preferred_element_type=jnp.float32).astype(xe.dtype)
 
 
@@ -145,17 +150,20 @@ def gather_moe(experts: dict, x: Array, top_idx: Array, top_w: Array,
     dead-route sentinel) contribute zero via a masked combine weight.
     Returns the local partial sum (T, D); caller psums across shards.
     ``use_kernel`` does not apply: the Pallas grouped GEMM wants the
-    (E_local, C, D) capacity layout this path exists to avoid."""
+    (E_local, C, D) capacity layout this path exists to avoid.  Quantized
+    expert weights keep the path's defining property: ``QuantTensor[idx]``
+    gathers only the selected experts' payload+scales, and only that
+    gathered slice is dequantized."""
     e_local = experts["w_gate"].shape[0]
     local = (top_idx >= e_start) & (top_idx < e_start + e_local)
     idx = jnp.clip(top_idx - e_start, 0, e_local - 1)
     w = jnp.where(local, top_w, 0.0)
-    g = jnp.einsum("td,tkdf->tkf", x, experts["w_gate"][idx],
+    g = quant.qdot("td,tkdf->tkf", x, experts["w_gate"][idx],
                    preferred_element_type=jnp.float32)
-    u = jnp.einsum("td,tkdf->tkf", x, experts["w_up"][idx],
+    u = quant.qdot("td,tkdf->tkf", x, experts["w_up"][idx],
                    preferred_element_type=jnp.float32)
     h = (jax.nn.silu(g) * u).astype(x.dtype)
-    y = jnp.einsum("tkf,tkfd->tkd", h, experts["w_down"][idx],
+    y = quant.qdot("tkf,tkfd->tkd", h, experts["w_down"][idx],
                    preferred_element_type=jnp.float32)
     return jnp.einsum("tk,tkd->td", w.astype(jnp.float32),
                       y.astype(jnp.float32)).astype(x.dtype)
@@ -171,10 +179,10 @@ def reference_moe(experts: dict, x: Array, top_idx: Array, top_w: Array) -> Arra
     wg, wu, wd = experts["w_gate"], experts["w_up"], experts["w_down"]
 
     def one_tok(xt, idx, w):
-        g = jnp.einsum("d,kdf->kf", xt, wg[idx], preferred_element_type=jnp.float32)
-        u = jnp.einsum("d,kdf->kf", xt, wu[idx], preferred_element_type=jnp.float32)
+        g = quant.qdot("d,kdf->kf", xt, wg[idx], preferred_element_type=jnp.float32)
+        u = quant.qdot("d,kdf->kf", xt, wu[idx], preferred_element_type=jnp.float32)
         h = (jax.nn.silu(g) * u).astype(xt.dtype)
-        y = jnp.einsum("kf,kfd->kd", h, wd[idx], preferred_element_type=jnp.float32)
+        y = quant.qdot("kf,kfd->kd", h, wd[idx], preferred_element_type=jnp.float32)
         return jnp.einsum("k,kd->d", w, y.astype(jnp.float32)).astype(xt.dtype)
 
     return jax.vmap(one_tok)(x, top_idx, top_w)

@@ -273,6 +273,175 @@ def chunked_prefill_ttft(w: MoEWorkload, hw: HardwareProfile, n_nodes: int,
 # cache layout decides max concurrency
 M2_ULTRA_MEM_BYTES = 192e9
 
+# quantized weight-store levels (core/quant.py, docs/DESIGN.md §8) in
+# preference order: least-lossy first
+WEIGHT_QUANT_LEVELS = ("none", "int8", "int4")
+
+
+def _itemsize(cfg) -> int:
+    import numpy as _np
+    return _np.dtype(getattr(cfg, "param_dtype", "bfloat16")).itemsize
+
+
+def quant_matrix_bytes(k: int, n: int, *, itemsize: int,
+                       quant: str = "none", block: int = 128,
+                       lead: int = 1) -> float:
+    """Stored bytes of ``lead`` stacked (k, n) weight matrices at a quant
+    level — the analytic twin of ``core/quant.quantize``'s layout: int8
+    keeps k rows of 1-byte values, int4 packs two per byte (``ceil(k/2)``
+    rows), and both add one fp32 scale per ``block`` of the reduction
+    axis per output column."""
+    if quant == "none":
+        return float(lead * k * n * itemsize)
+    nb = -(-k // block)
+    payload = (-(-k // 2) if quant == "int4" else k) * n
+    return float(lead * (payload + nb * n * 4))
+
+
+def _resolve_quant(cfg, quant, block):
+    """Default quant level / block / kinds from the config's weight-store
+    knobs (one resolver shared by every weight-bytes term)."""
+    if quant is None:
+        quant = getattr(cfg, "weight_quant", "none")
+    block = block or getattr(cfg, "weight_quant_block", 128)
+    kinds = tuple(getattr(cfg, "weight_quant_kinds",
+                          ("attn", "mlp", "experts", "lm_head")))
+    return quant, block, kinds
+
+
+def _expert_layer_bytes(cfg, quant, block, kinds) -> float:
+    """ONE layer's expert-stack bytes (the shardable part): the single
+    source of the lead = E_padded x replication formula used by both the
+    per-layer term and the per-node split."""
+    eq = quant if "experts" in kinds else "none"
+    p = _itemsize(cfg)
+    d, f = cfg.d_model, cfg.d_ff
+    lead = cfg.num_experts_padded * max(
+        getattr(cfg, "expert_replication", 1), 1)
+    return (2 * quant_matrix_bytes(d, f, itemsize=p, quant=eq, block=block,
+                                   lead=lead)
+            + quant_matrix_bytes(f, d, itemsize=p, quant=eq, block=block,
+                                 lead=lead))
+
+
+def weight_bytes_per_layer(cfg, *, quant: str | None = None,
+                           block: int | None = None) -> float:
+    """One decoder layer's stored weight bytes under the blockwise weight
+    store — exact for the attention families (dense/moe/vlm/audio; the
+    formula mirrors ``transformer.init_blocks`` leaf for leaf and is
+    validated against ``jax.eval_shape`` of the constructed params in
+    tests/test_perf_model.py, the same pattern as ``kv_bytes_per_token``).
+    ``quant``/``block`` default to the config's ``weight_quant`` knobs;
+    kinds follow ``cfg.weight_quant_kinds`` (router stays fp by
+    default)."""
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"weight_bytes_per_layer models attention-family layers, not "
+            f"{cfg.family!r}")
+    quant, block, kinds = _resolve_quant(cfg, quant, block)
+    p = _itemsize(cfg)
+    d, f = cfg.d_model, cfg.d_ff
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    norm_elems = 2 * d if cfg.norm == "layernorm" else d
+    total = 2 * norm_elems * p                     # ln1 + ln2
+    aq = quant if "attn" in kinds else "none"
+    total += quant_matrix_bytes(d, hq * hd, itemsize=p, quant=aq,
+                                block=block)
+    total += 2 * quant_matrix_bytes(d, hkv * hd, itemsize=p, quant=aq,
+                                    block=block)
+    total += quant_matrix_bytes(hq * hd, d, itemsize=p, quant=aq,
+                                block=block)
+    if cfg.qkv_bias:
+        total += (hq + 2 * hkv) * hd * p
+    if cfg.qk_norm:
+        total += 2 * hd * p
+    if cfg.is_moe:
+        rq = quant if "router" in kinds else "none"
+        total += quant_matrix_bytes(d, cfg.num_experts_padded, itemsize=p,
+                                    quant=rq, block=block)
+        total += _expert_layer_bytes(cfg, quant, block, kinds)
+    else:
+        mq = quant if "mlp" in kinds else "none"
+        total += 2 * quant_matrix_bytes(d, f, itemsize=p, quant=mq,
+                                        block=block)
+        total += quant_matrix_bytes(f, d, itemsize=p, quant=mq, block=block)
+    return total
+
+
+def expert_weight_bytes(cfg, *, quant: str | None = None,
+                        block: int | None = None) -> float:
+    """All layers' expert-stack bytes — the shardable part of the model
+    (every other weight is replicated per node under the decentralized
+    schedule)."""
+    if not cfg.is_moe:
+        return 0.0
+    quant, block, kinds = _resolve_quant(cfg, quant, block)
+    return cfg.num_layers * _expert_layer_bytes(cfg, quant, block, kinds)
+
+
+def model_weight_bytes(cfg, *, quant: str | None = None,
+                       block: int | None = None) -> float:
+    """Total stored weight bytes of the constructed params pytree:
+    embedding (+ lm_head unless tied) + final norm + all layers.  The
+    quantity ``engine.memory_stats()['weight_bytes']`` reports, exact
+    against ``jax.eval_shape`` of ``quantize_params(model.init(...))``."""
+    quant, block, kinds = _resolve_quant(cfg, quant, block)
+    p = _itemsize(cfg)
+    d = cfg.d_model
+    total = cfg.vocab_padded * d * p               # embed (always fp)
+    if not cfg.tie_embeddings:
+        hq = quant if "lm_head" in kinds else "none"
+        total += quant_matrix_bytes(d, cfg.vocab_padded, itemsize=p,
+                                    quant=hq, block=block)
+    total += (2 * d if cfg.norm == "layernorm" else d) * p   # final_norm
+    return total + cfg.num_layers * weight_bytes_per_layer(
+        cfg, quant=quant, block=block)
+
+
+def per_node_weight_bytes(cfg, *, n_nodes: int = 1,
+                          quant: str | None = None,
+                          block: int | None = None) -> float:
+    """Weight bytes resident on ONE of ``n_nodes`` expert-parallel nodes:
+    the expert stack divides across nodes, everything else (attention,
+    router, embeddings) is replicated — the decentralized schedule's
+    placement (paper Fig. 7), which is what the Table-2 memory budget
+    constrains."""
+    ex = expert_weight_bytes(cfg, quant=quant, block=block)
+    shared = model_weight_bytes(cfg, quant=quant, block=block) - ex
+    return shared + ex / max(n_nodes, 1)
+
+
+def fits_in_memory(cfg, *, n_nodes: int = 1, quant: str | None = None,
+                   block: int | None = None,
+                   budget: float = M2_ULTRA_MEM_BYTES,
+                   kv_pool_bytes: float = 0.0) -> bool:
+    """Does the model (at a quant level) plus a KV pool fit one node's
+    unified-memory budget?  The weight-bytes term composed with the PR-4
+    capacity term: weights are the dominant consumer and quantization the
+    lever that decides hostability at all."""
+    return per_node_weight_bytes(cfg, n_nodes=n_nodes, quant=quant,
+                                 block=block) + kv_pool_bytes <= budget
+
+
+def max_model_at_budget(cfg, *, n_nodes: int = 1,
+                        budget: float = M2_ULTRA_MEM_BYTES,
+                        kv_pool_bytes: float = 0.0,
+                        block: int | None = None) -> dict:
+    """Which quant levels let ``n_nodes`` budget-sized nodes host this
+    model (leaving ``kv_pool_bytes`` for the cache)?  Returns per-level
+    fits/bytes plus ``level`` — the least-lossy level that fits (None if
+    even int4 does not): the answer to "what fits on N M2-Ultra nodes at
+    which quant level"."""
+    out = {"fits": {}, "per_node_bytes": {}, "level": None}
+    for level in WEIGHT_QUANT_LEVELS:
+        b = per_node_weight_bytes(cfg, n_nodes=n_nodes, quant=level,
+                                  block=block)
+        out["per_node_bytes"][level] = b
+        out["fits"][level] = b + kv_pool_bytes <= budget
+        if out["level"] is None and out["fits"][level]:
+            out["level"] = level
+    return out
+
 
 def kv_bytes_per_token(cfg=None, *, n_layers: int = 0, num_kv_heads: int = 0,
                        head_dim: int = 0, precision: int = 2,
@@ -330,6 +499,28 @@ def serving_capacity(cfg, *, pool_bytes: float, max_cache: int,
     return {"bytes_per_token": bpt, "contiguous": contiguous,
             "paged": paged,
             "gain": paged / contiguous if contiguous else float("inf")}
+
+
+def node_serving_capacity(cfg, *, n_nodes: int, max_cache: int,
+                          mean_context: int, page_size: int,
+                          quant: str | None = None,
+                          budget: float = M2_ULTRA_MEM_BYTES) -> dict:
+    """The weight-bytes term composed with the PR-4 KV-capacity term:
+    on ``n_nodes`` budget-sized nodes, the quantized weight store takes
+    its per-node share first and WHATEVER REMAINS is the KV pool —
+    ``serving_capacity`` then converts that pool into concurrent-request
+    bounds.  One call answers "what fits on N M2-Ultra nodes at which
+    quant level, and how many requests does the leftover memory serve"
+    (docs/DESIGN.md §8)."""
+    wb = per_node_weight_bytes(cfg, n_nodes=n_nodes, quant=quant)
+    pool = max(budget - wb, 0.0)
+    out = serving_capacity(cfg, pool_bytes=pool, max_cache=max_cache,
+                           mean_context=mean_context, page_size=page_size)
+    out.update(weight_bytes_per_node=wb, kv_pool_bytes=pool,
+               fits=wb <= budget,
+               quant=quant if quant is not None
+               else getattr(cfg, "weight_quant", "none"))
+    return out
 
 
 def prefix_hit_ttft(w: MoEWorkload, hw: HardwareProfile, n_nodes: int,

@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
+
 
 def unstack_blocks(blocks) -> list:
     """Prestacked blocks pytree (leading L axis) -> list of per-layer trees."""
@@ -46,6 +48,15 @@ def pad_experts(experts: dict, num_padded: int) -> dict:
         return jnp.pad(a, widths)
 
     return jax.tree.map(pad, experts)
+
+
+def quantize_blocks(blocks, level: str = "none", *, block: int = 128,
+                    kinds: tuple = quant.DEFAULT_KINDS):
+    """Quantize a prestacked blocks tree into the blockwise weight store
+    (core/quant.py, docs/DESIGN.md §8) — the second half of the one-time
+    preprocessing step: stack once, quantize once, serve forever.  The
+    identity at ``level='none'``; idempotent on already-quantized trees."""
+    return quant.quantize_tree(blocks, level, block=block, kinds=kinds)
 
 
 def validate_roundtrip(blocks) -> bool:

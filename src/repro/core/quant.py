@@ -1,0 +1,336 @@
+"""Blockwise int8/int4 quantized weight store (docs/DESIGN.md §8).
+
+The paper's cost-efficiency argument hinges on fitting DBRX-class MoE
+weights inside each node's unified-memory budget (Table 2); weight bytes —
+not KV bytes — are the dominant consumer, and weight quantization is the
+lever that decides which models a consumer node can host at all.  This
+module makes quantized weights *first-class pytree leaves* so the rest of
+the framework is layout-agnostic:
+
+  * ``QuantTensor`` — a pytree-registered dataclass holding an int8 (or
+    packed-int4) payload plus per-block fp32 scales over the reduction
+    axis.  Payload and scales are **sibling leaves** of one container, so
+    donation, ``lax.scan`` slicing of prestacked (L, ...) weights, ckpt
+    flattening and shard_map in_specs all see two ordinary arrays that
+    travel together (the same reason the int8 KV cache stores ``k_scale``
+    beside ``k``).
+  * ``quantize`` / ``dequantize`` — the ONE symmetric absmax numeric
+    policy.  The reduction axis is always axis **-2** (every weight matmul
+    in this framework contracts the second-to-last dim), split into
+    ``block``-sized groups; each group stores one fp32 scale
+    ``absmax / qmax``.  ``attention.quantize_kv`` wraps the same
+    low-level ``absmax_quantize`` (axis -1, one block over ``hd``) so the
+    repo has exactly one quantization numeric policy.
+  * ``qdot`` — the single policy point every weight-consuming matmul goes
+    through: raw arrays pass straight to ``jnp.einsum`` (bit-identical to
+    the pre-refactor call sites); ``QuantTensor`` weights are dequantized
+    on the fly.  Call sites never branch on the weight representation.
+  * ``quantize_tree`` / ``quantize_params`` — the quantize-on-load
+    pipeline (one-time preprocessing, exactly like the paper's prestacking
+    script): walk a params tree and convert eligible weight kinds
+    (``attn``, ``mlp``, ``experts``, ``lm_head`` by default — router and
+    embedding stay fp) into ``QuantTensor`` leaves.
+
+Int4 packs two values per byte along the reduction axis (element 2i in the
+low nibble, 2i+1 in the high nibble), symmetric in [-7, 7]; the logical
+reduction size rides in ``orig_dim`` so ragged dims round-trip exactly.
+Expert shards ride the existing expert-parallel schedules unchanged: the
+leading (L, E) axes of payload and scales shard identically, and
+activations stay fp end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# symmetric ranges: int8 uses the full [-127, 127]; int4 packs nibbles and
+# stays in [-7, 7] so low/high nibbles sign-extend identically
+QMAX = {8: 127, 4: 7}
+LEVELS = ("none", "int8", "int4")
+BITS = {"int8": 8, "int4": 4}
+
+# weight kinds quantized by default (ModelConfig.weight_quant_kinds):
+# router and embedding stay fp — the router's (D, E) matrix is tiny and its
+# top-k is precision-sensitive; the embedding is consumed by row *gather*,
+# not a matmul, so it never passes through the qdot policy point
+DEFAULT_KINDS = ("attn", "mlp", "experts", "lm_head")
+
+WEIGHT_NAMES = ("w_gate", "w_up", "w_down", "wq", "wk", "wv", "wo",
+                "lm_head", "router", "embed")
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("data", "scale"),
+                   meta_fields=("bits", "block", "orig_dim", "out_dtype"))
+@dataclasses.dataclass(frozen=True)
+class QuantTensor:
+    """Blockwise-quantized weight: int8/int4 payload + per-block scales.
+
+    ``data``:  int8 payload.  int8: the logical shape with the reduction
+               axis (-2) unchanged; int4: two values packed per byte along
+               axis -2 (``ceil(K/2)`` rows).
+    ``scale``: fp32, logical shape with axis -2 replaced by the number of
+               blocks ``ceil(K / block)``.
+    ``bits`` / ``block``: quantization width and block size (static).
+    ``orig_dim``: logical size K of the reduction axis (static) — int4
+               packing and block padding are undone against it.
+    ``out_dtype``: dtype string ``dequantize`` targets by default (the
+               original weight dtype, so quantized and raw weights are
+               interchangeable leaves).
+
+    Leading axes (layer stack L, expert axis E) are ordinary batch axes of
+    both leaves: ``lax.scan`` slices them in lockstep, shard_map in_specs
+    written as rank-3 PartitionSpecs broadcast over both, and
+    ``__getitem__`` gathers experts without touching the reduction axis.
+    """
+    data: Array
+    scale: Array
+    bits: int
+    block: int
+    orig_dim: int
+    out_dtype: str
+
+    @property
+    def shape(self) -> tuple:
+        """LOGICAL (unpacked) shape — call sites read e.g. E_local here."""
+        s = list(self.data.shape)
+        s[-2] = self.orig_dim
+        return tuple(s)
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.out_dtype)
+
+    def __getitem__(self, idx):
+        """Leading-axis indexing/gather (e.g. gather_moe's selected-expert
+        read): payload and scales index identically, the reduction axis is
+        untouched, so the result is a valid QuantTensor."""
+        return QuantTensor(self.data[idx], self.scale[idx], self.bits,
+                           self.block, self.orig_dim, self.out_dtype)
+
+    def dequantize(self, dtype=None) -> Array:
+        return dequantize(self, dtype)
+
+
+# ---------------------------------------------------------------------------
+# the ONE numeric policy: per-block symmetric absmax quantization
+# ---------------------------------------------------------------------------
+
+def absmax_quantize(x: Array, *, bits: int = 8, block: int | None = None,
+                    axis: int = -1) -> tuple[Array, Array]:
+    """Per-block symmetric quantization along ``axis``.
+
+    ``axis`` is split into ``ceil(K / block)`` groups of ``block`` (zero-
+    padded); each group's scale is ``absmax / qmax`` and values round to
+    ``round(x / max(scale, 1e-20))``.  Returns (q int8 with ``axis`` padded
+    to a whole number of blocks, scale fp32 with ``axis`` replaced by the
+    block count).  With ``block = K`` and ``axis = -1`` this is exactly the
+    int8 KV-cache policy (one scale per (token, head) row), bit-identical
+    to the pre-refactor ``attention.quantize_kv``.
+    """
+    axis = axis % x.ndim
+    k = x.shape[axis]
+    block = block or k
+    nb = -(-k // block)
+    xf = x.astype(jnp.float32)
+    if nb * block != k:
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, nb * block - k)
+        xf = jnp.pad(xf, pad)
+    xb = xf.reshape(xf.shape[:axis] + (nb, block) + xf.shape[axis + 1:])
+    scale = jnp.max(jnp.abs(xb), axis=axis + 1) / QMAX[bits]
+    q = jnp.round(xb / jnp.maximum(jnp.expand_dims(scale, axis + 1), 1e-20))
+    return q.astype(jnp.int8).reshape(xf.shape), scale
+
+
+def absmax_dequantize(q: Array, scale: Array, *, block: int, axis: int = -1,
+                      dtype=jnp.float32) -> Array:
+    """Inverse of ``absmax_quantize``: repeat each block's scale over its
+    ``block`` values (truncated to the payload's extent) and multiply."""
+    axis = axis % q.ndim
+    s = jnp.repeat(scale, block, axis=axis)
+    if s.shape[axis] != q.shape[axis]:
+        s = jax.lax.slice_in_dim(s, 0, q.shape[axis], axis=axis)
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing (two values per byte along the reduction axis)
+# ---------------------------------------------------------------------------
+
+def pack_int4(q: Array, axis: int = -2) -> Array:
+    """int8 values in [-7, 7] -> packed int8, pairs (2i, 2i+1) along
+    ``axis`` (low, high nibble).  Odd extents are zero-padded."""
+    axis = axis % q.ndim
+    k = q.shape[axis]
+    if k % 2:
+        pad = [(0, 0)] * q.ndim
+        pad[axis] = (0, 1)
+        q = jnp.pad(q, pad)
+        k += 1
+    pairs = q.reshape(q.shape[:axis] + (k // 2, 2) + q.shape[axis + 1:])
+    lo = jax.lax.index_in_dim(pairs, 0, axis + 1, keepdims=False)
+    hi = jax.lax.index_in_dim(pairs, 1, axis + 1, keepdims=False)
+    lo_u = jax.lax.bitcast_convert_type(lo, jnp.uint8)
+    hi_u = jax.lax.bitcast_convert_type(hi, jnp.uint8)
+    packed = (lo_u & 0xF) | ((hi_u & 0xF) << 4)
+    return jax.lax.bitcast_convert_type(packed, jnp.int8)
+
+
+def unpack_int4(p: Array, axis: int = -2) -> Array:
+    """Packed int8 -> int8 values, doubling ``axis`` (inverse of
+    ``pack_int4``).  Pure shifts/compares — also runs inside Pallas."""
+    axis = axis % p.ndim
+    u = jax.lax.bitcast_convert_type(p, jnp.uint8)
+    lo = (u & 0xF).astype(jnp.int8)
+    hi = ((u >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    pairs = jnp.stack([lo, hi], axis=axis + 1)
+    return pairs.reshape(p.shape[:axis] + (2 * p.shape[axis],)
+                         + p.shape[axis + 1:])
+
+
+# ---------------------------------------------------------------------------
+# QuantTensor construction / materialization
+# ---------------------------------------------------------------------------
+
+def quantize(w: Array, level: str = "int8", *, block: int = 128
+             ) -> QuantTensor:
+    """Quantize a weight matrix (reduction axis -2) into a QuantTensor."""
+    if level not in BITS:
+        raise ValueError(f"unknown weight_quant level {level!r}; "
+                         f"expected one of {LEVELS}")
+    bits = BITS[level]
+    if bits == 4 and block % 2:
+        raise ValueError(f"int4 packing needs an even block, got {block}")
+    k = w.shape[-2]
+    q, scale = absmax_quantize(w, bits=bits, block=block, axis=-2)
+    q = jax.lax.slice_in_dim(q, 0, k, axis=-2)   # drop block padding
+    if bits == 4:
+        q = pack_int4(q, axis=-2)
+    return QuantTensor(q, scale, bits, block, k, str(w.dtype))
+
+
+def dequantize(qt: QuantTensor, dtype=None) -> Array:
+    """QuantTensor -> dense weight in ``dtype`` (default: the original
+    weight dtype, so raw and quantized leaves are interchangeable)."""
+    v = qt.data
+    if qt.bits == 4:
+        v = unpack_int4(v, axis=-2)
+    v = jax.lax.slice_in_dim(v, 0, qt.orig_dim, axis=-2)
+    return absmax_dequantize(v, qt.scale, block=qt.block, axis=-2,
+                             dtype=dtype or jnp.dtype(qt.out_dtype))
+
+
+def materialize(w, dtype=None):
+    """Dequantize-or-identity: the helper for call sites that index or
+    reshape weights rather than einsum them."""
+    if isinstance(w, QuantTensor):
+        return dequantize(w, dtype)
+    return w
+
+
+def qdot(eq: str, x: Array, w, *, preferred_element_type=None,
+         weight_dtype=None) -> Array:
+    """THE weight-matmul policy point: ``einsum(eq, x, w)`` where ``w`` is
+    a raw array (bit-identical passthrough) or a QuantTensor (dequantized
+    on the fly, to ``weight_dtype`` or its original dtype).  ``eq`` must
+    contract ``w``'s axis -2 — the invariant the store quantizes along."""
+    if isinstance(w, QuantTensor):
+        w = dequantize(w, weight_dtype)
+    elif weight_dtype is not None:
+        w = w.astype(weight_dtype)
+    if preferred_element_type is not None:
+        return jnp.einsum(eq, x, w,
+                          preferred_element_type=preferred_element_type)
+    return jnp.einsum(eq, x, w)
+
+
+# ---------------------------------------------------------------------------
+# quantize-on-load: tree policy (the paper's one-time preprocessing step)
+# ---------------------------------------------------------------------------
+
+def classify_weight(names: list[str]) -> str | None:
+    """Map a params-tree path to a weight kind, or None for leaves the
+    store never touches (norms, biases, conv kernels, ssm state, ...)."""
+    name = names[-1]
+    if name not in WEIGHT_NAMES:
+        return None
+    if name == "embed":
+        return "embed"
+    if name == "lm_head":
+        return "lm_head"
+    if name == "router":
+        return "router"
+    if name in ("wq", "wk", "wv", "wo"):
+        return "attn"
+    # w_gate / w_up / w_down: experts when under the expert stack
+    return "experts" if "experts" in names else "mlp"
+
+
+def quantize_tree(params, level: str, *, block: int = 128,
+                  kinds: tuple = DEFAULT_KINDS):
+    """Convert eligible weight leaves of ``params`` to QuantTensor.
+
+    ``level='none'`` is the identity (the raw tree round-trips through the
+    store untouched); already-quantized leaves pass through, so the
+    pipeline is idempotent.  Only >=2-D leaves whose path classifies into
+    ``kinds`` are converted; ``embed`` is rejected even if requested (it
+    is consumed by row gather, not a matmul — keep it fp)."""
+    if level == "none":
+        return params
+    if "embed" in kinds:
+        raise ValueError("the embedding is consumed by row gather, not a "
+                         "qdot matmul — it must stay fp")
+
+    def rule(path, leaf):
+        if isinstance(leaf, QuantTensor) or getattr(leaf, "ndim", 0) < 2:
+            return leaf
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        if classify_weight(names) in kinds:
+            return quantize(leaf, level, block=block)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        rule, params, is_leaf=lambda x: isinstance(x, QuantTensor))
+
+
+def quantize_params(params, cfg):
+    """Apply ``cfg.weight_quant`` / ``weight_quant_block`` /
+    ``weight_quant_kinds`` to a full params tree — the engine's
+    quantize-on-load entry point."""
+    return quantize_tree(params, getattr(cfg, "weight_quant", "none"),
+                         block=getattr(cfg, "weight_quant_block", 128),
+                         kinds=tuple(getattr(cfg, "weight_quant_kinds",
+                                             DEFAULT_KINDS)))
+
+
+def dequantize_tree(tree, dtype=None):
+    """Materialize every QuantTensor leaf back to a dense array (inverse of
+    ``quantize_tree`` up to quantization error).  Serving the result as raw
+    fp params is the *fake-quant reference*: it holds exactly the values
+    the quantized store dequantizes on the fly, so a quantized engine must
+    be argmax-token-identical to it — the machinery-correctness gate that
+    is robust where raw-fp token equality is not (int8 rounding shifts
+    logits by ~1e-2, far above greedy tie gaps; see docs/DESIGN.md §8)."""
+    return jax.tree.map(
+        lambda a: dequantize(a, dtype) if isinstance(a, QuantTensor) else a,
+        tree, is_leaf=lambda x: isinstance(x, QuantTensor))
+
+
+def tree_bytes(tree) -> int:
+    """Total payload bytes of a pytree (QuantTensor leaves count their int8
+    payload + fp32 scales — the number ``engine.memory_stats`` reports and
+    ``perf_model.model_weight_bytes`` models)."""
+    return int(sum(a.size * jnp.dtype(a.dtype).itemsize
+                   for a in jax.tree.leaves(tree)))

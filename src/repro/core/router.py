@@ -13,6 +13,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
+
 Array = jax.Array
 
 
@@ -28,8 +30,11 @@ def route(router_w: Array, x: Array, k: int, *,
     """x: (T, D); router_w: (D, E). Returns top-k routing decisions.
 
     ``n_valid_experts``: if set (< E), experts >= n_valid are "dead" padding
-    and receive -inf logits.
+    and receive -inf logits.  The router stays fp under the default weight
+    store policy (core/quant.DEFAULT_KINDS), but a QuantTensor router (the
+    per-kind override) is materialized here.
     """
+    router_w = quant.materialize(router_w)
     e = router_w.shape[-1]
     logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
                         router_w.astype(jnp.float32))

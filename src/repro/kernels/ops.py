@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.core import quant
 from repro.kernels import flash_attn, moe_gemm, ref
 
 
@@ -15,14 +16,21 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def moe_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
-            w_down: jax.Array) -> jax.Array:
-    """Prestacked grouped expert FFN (E, C, D) -> (E, C, D)."""
+def moe_ffn(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    """Prestacked grouped expert FFN (E, C, D) -> (E, C, D).
+
+    Weights may be raw arrays or blockwise-quantized QuantTensors
+    (docs/DESIGN.md §8) — the quantized variant streams int8/packed-int4
+    tiles HBM->VMEM and dequantizes in-kernel."""
+    if isinstance(w_gate, quant.QuantTensor):
+        return moe_gemm.moe_ffn_kernel_quant(x, w_gate, w_up, w_down,
+                                             interpret=_interpret())
     return moe_gemm.moe_ffn_kernel(x, w_gate, w_up, w_down,
                                    interpret=_interpret())
 
 
 moe_ffn_ref = ref.moe_ffn_ref
+moe_ffn_ref_quant = ref.moe_ffn_ref_quant
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,

@@ -36,3 +36,13 @@ def moe_ffn_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     h = (jax.nn.silu(g) * u).astype(x.dtype)
     return jnp.einsum("ecf,efd->ecd", h, w_down,
                       preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def moe_ffn_ref_quant(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    """Oracle for the quantized grouped GEMM (kernels/moe_gemm.py
+    ``moe_ffn_kernel_quant``): dequantize the QuantTensor weights to the
+    activation dtype, then run the dense reference — the in-kernel tile
+    dequant must match this within the usual kernel tolerances."""
+    from repro.core import quant
+    m = lambda w: quant.materialize(w, x.dtype)
+    return moe_ffn_ref(x, m(w_gate), m(w_up), m(w_down))

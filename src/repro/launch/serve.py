@@ -36,7 +36,11 @@ def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
                unified: bool = True, chunk_len: int = 32,
                token_budget: int = 0, temperature: float = 0.0,
                top_k: int = 0, paged: bool = False, page_size: int = 16,
-               num_pages: int = 0, shared_prefix: int = 0):
+               num_pages: int = 0, shared_prefix: int = 0,
+               weight_quant: str | None = None, fit_cfg=None):
+    if weight_quant is not None:
+        cfg = cfg.replace(weight_quant=weight_quant)
+    fit_cfg = fit_cfg or cfg
     eng = ServingEngine(cfg, EngineConfig(
         max_batch=max_batch, prefill_len=prompt_len,
         max_cache=prompt_len + new_tokens + 8,
@@ -64,6 +68,11 @@ def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
     print(f"overall throughput     : {tp['total_tok_per_s']:.1f} tok/s")
     print(f"prefill padding overhead: {tp['prefill_padding_overhead']:.1%}  "
           f"decode stall: {tp['decode_stall_s'] * 1e3:.1f} ms")
+    ms = eng.memory_stats()
+    print(f"device memory          : weights {ms['weight_bytes'] / 1e6:.2f} "
+          f"MB (weight_quant={ms['weight_quant']}), KV pool "
+          f"{ms['kv_pool_bytes'] / 1e6:.2f} MB, total "
+          f"{ms['total_bytes'] / 1e6:.2f} MB")
     tt = eng.ttft()
     if tt["n"]:
         print(f"TTFT p50/p95           : {tt['p50'] * 1e3:.1f} / "
@@ -88,6 +97,18 @@ def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
                 perf_model.M2_ULTRA_10GBE, n, expected_experts=e)
             print(f"E[#exec experts/node/layer] @ {n} nodes: {e:.2f}  "
                   f"(paper-model bound {est.throughput:.1f} tok/s)")
+        # the weight-bytes capacity term (docs/DESIGN.md §8): which quant
+        # level lets N Table-2 nodes host the arch — always computed from
+        # ``fit_cfg`` (main() passes the FULL-SIZE config, so --reduced
+        # demos still print the real capacity answer)
+        try:
+            fit = perf_model.max_model_at_budget(fit_cfg, n_nodes=2)
+            lv = fit["level"] or "does not fit (even int4)"
+            print(f"memory fit @ 2 M2-Ultra nodes ({fit_cfg.name}): {lv}  "
+                  + " ".join(f"{k}={v / 1e9:.1f}GB"
+                             for k, v in fit["per_node_bytes"].items()))
+        except ValueError:
+            pass                       # non-attention family: no model
     return eng, done
 
 
@@ -126,6 +147,12 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt shared by every request "
                          "(exercises the prefix cache in --paged mode)")
+    ap.add_argument("--weight-quant", choices=["none", "int8", "int4"],
+                    default=None,
+                    help="blockwise quantized weight store "
+                         "(docs/DESIGN.md §8): weights load as int8 / "
+                         "packed-int4 QuantTensor leaves with per-block "
+                         "fp32 scales; router and embedding stay fp")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -137,7 +164,9 @@ def main():
                chunk_len=args.chunk_len, token_budget=args.token_budget,
                temperature=args.temperature, top_k=args.top_k,
                paged=args.paged, page_size=args.page_size,
-               num_pages=args.num_pages, shared_prefix=args.shared_prefix)
+               num_pages=args.num_pages, shared_prefix=args.shared_prefix,
+               weight_quant=args.weight_quant,
+               fit_cfg=get_config(args.arch))
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import quant as quant_lib
 from repro.launch import mesh as mesh_lib
 
 
@@ -41,26 +42,59 @@ def params_pspec(cfg, mesh, params, mode: str = "train"):
     tp = "model"
     fsdp = "data" if (mode == "train" and "data" in mesh.axis_names) else None
 
+    def _axes_divide(spec: P, shape) -> P:
+        """Drop spec axes whose mesh extent no longer divides the leaf dim
+        — QuantTensor payload/scale leaves shrink the reduction axis
+        (int4 packing, per-block scales), so a spec derived from the
+        logical weight may stop dividing; replicating that dim is always
+        safe (GSPMD is value-semantic over any layout)."""
+        out = []
+        for i, ax in enumerate(spec):
+            if ax is None:
+                out.append(None)
+                continue
+            size = mesh_lib.axes_size(
+                mesh, ax if isinstance(ax, tuple) else (ax,))
+            out.append(ax if size and shape[i] % size == 0 else None)
+        return P(*out)
+
     def rule(path, leaf) -> P:
         names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
         name = names[-1]
+        # QuantTensor membership is keyed on the PARENT being a known
+        # weight name, not on the field names alone: plain param dicts
+        # reuse "scale" (layernorm) and must not be re-keyed
+        quant_leaf = (name in ("data", "scale") and len(names) >= 2
+                      and names[-2] in quant_lib.WEIGHT_NAMES)
+        if quant_leaf:
+            # QuantTensor leaves: spec by the logical weight's name (the
+            # container's key); payload and scales share every leading
+            # axis (layer stack, expert axis), so the same spec applies
+            names = names[:-1]
+            name = names[-1]
         nd = leaf.ndim
         shape = leaf.shape
         in_experts = "experts" in names
         in_attn = "attn" in names or (names[-2:-1] == ["mix"])
-        sub = lambda **kw: _spec(nd, **kw)
+
+        def sub(**kw):
+            spec = _spec(nd, **kw)
+            return _axes_divide(spec, shape) if quant_leaf else spec
+
+        def fin(spec: P) -> P:
+            return _axes_divide(spec, shape) if quant_leaf else spec
 
         if name == "embed":                       # (Vpad, D)
             return P(tp, fsdp)
         if name == "lm_head":                     # (D, Vpad)
-            return P(fsdp, tp)
+            return fin(P(fsdp, tp))
         if in_experts:                            # (L, E, D, F) / (L, E, F, D)
             if name in ("w_gate", "w_up"):
                 dd = shape[2]
-                return P(None, tp, fsdp if _dim_ok(dd, mesh, "data") and fsdp else None, None)
+                return fin(P(None, tp, fsdp if _dim_ok(dd, mesh, "data") and fsdp else None, None))
             if name == "w_down":
                 dd = shape[3]
-                return P(None, tp, None, fsdp if _dim_ok(dd, mesh, "data") and fsdp else None)
+                return fin(P(None, tp, None, fsdp if _dim_ok(dd, mesh, "data") and fsdp else None))
             return sub()
         if name == "router":                      # (L, D, E)
             return sub(**({"1": fsdp} if fsdp and _dim_ok(shape[1], mesh, "data") else {}))

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.core import quant
 from repro.models import layers
 
 Array = jax.Array
@@ -153,9 +154,9 @@ def _project_qkv(p: dict, cfg, x: Array, positions, mrope_positions=None,
                  mesh=None):
     b, s, _ = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = jnp.einsum("bsd,de->bse", x, p["wq"])
-    k = jnp.einsum("bsd,de->bse", x, p["wk"])
-    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    q = quant.qdot("bsd,de->bse", x, p["wq"])
+    k = quant.qdot("bsd,de->bse", x, p["wk"])
+    v = quant.qdot("bsd,de->bse", x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     # pin the head layout at the reshape: serve-mode wk/wv shard the
@@ -233,7 +234,7 @@ def attn_forward(p: dict, cfg, x: Array, positions: Array, window: int | None,
             mask = mask & (kp > qp - window)
         out = attend(q, k, v, mask, cfg.head_dim ** -0.5)
     out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
-    return jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return quant.qdot("bse,ed->bsd", out, p["wo"])
 
 
 # ---------------------------------------------------------------------------
@@ -268,16 +269,21 @@ def layer_cache_spec(cfg, batch: int, cache_len: int, dtype):
 
 
 def quantize_kv(x: Array) -> tuple[Array, Array]:
-    """Per-(token, head) symmetric int8: x (..., hd) -> (int8, fp32 scale)."""
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
-                    keepdims=True) / 127.0
-    q = jnp.round(x.astype(jnp.float32)
-                  / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
-    return q, scale
+    """Per-(token, head) symmetric int8: x (..., hd) -> (int8, fp32 scale).
+
+    Thin wrapper over ``core/quant.absmax_quantize`` — ONE quantization
+    numeric policy repo-wide (docs/DESIGN.md §8): a single block spanning
+    the whole ``hd`` axis reproduces the original per-row absmax/127
+    quantizer bit for bit (the block count is 1, so the scale keeps its
+    (..., 1) keepdims shape)."""
+    return quant.absmax_quantize(x, bits=8, block=x.shape[-1], axis=-1)
 
 
 def dequantize_kv(q: Array, scale: Array, dtype) -> Array:
-    return (q.astype(jnp.float32) * scale).astype(dtype)
+    """Inverse wrapper: one block over ``hd`` makes the per-block repeat a
+    plain broadcast — bit-identical to the pre-refactor ``q * scale``."""
+    return quant.absmax_dequantize(q, scale, block=q.shape[-1], axis=-1,
+                                   dtype=dtype)
 
 
 def _update_cache(cache_kv: Array, new_kv: Array, lengths: Array, ring: bool) -> Array:
@@ -366,7 +372,7 @@ def attn_decode_step(p: dict, cfg, cache: dict, x: Array, lengths: Array,
             mask = mask & (idx > lengths[:, None] - window)
     out = _attend_grouped_decode(cfg, q, k_cache, v_cache, mask)
     out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
-    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    out = quant.qdot("bse,ed->bsd", out, p["wo"])
     return out, new_cache
 
 
@@ -485,7 +491,7 @@ def attn_block_step(p: dict, cfg, cache: dict, x: Array, positions: Array,
         mask = mask & (slot_pos[:, None, :] > qp[:, :, None] - window)
     out = _attend_grouped_block(cfg, q, k_cache, v_cache, mask)
     out = out.reshape(b, t, cfg.num_heads * cfg.head_dim)
-    return jnp.einsum("bse,ed->bsd", out, p["wo"]), new_cache
+    return quant.qdot("bse,ed->bsd", out, p["wo"]), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -594,7 +600,7 @@ def attn_block_step_paged(p: dict, cfg, cache: dict, x: Array,
         mask = mask & (slot_pos > qp - window)
     out = _attend_grouped_block(cfg, q, k_cache, v_cache, mask)
     out = out.reshape(b, t, cfg.num_heads * cfg.head_dim)
-    return jnp.einsum("bse,ed->bsd", out, p["wo"]), new_cache
+    return quant.qdot("bse,ed->bsd", out, p["wo"]), new_cache
 
 
 def attn_decode_step_cp(p: dict, cfg, cache: dict, x: Array, lengths: Array,
@@ -619,8 +625,8 @@ def attn_decode_step_cp(p: dict, cfg, cache: dict, x: Array, lengths: Array,
     ring = window is not None and cache_len == window
     q, k_new, v_new = _project_qkv(p, cfg, x, lengths[:, None], mrope_positions,
                                    mesh)
-    quant = kv_quantized(cfg)
-    if quant:
+    kv_q = kv_quantized(cfg)
+    if kv_q:
         kq, ksc = quantize_kv(k_new)
         vq, vsc = quantize_kv(v_new)
         new_tree = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
@@ -651,7 +657,7 @@ def attn_decode_step_cp(p: dict, cfg, cache: dict, x: Array, lengths: Array,
         cache_t = jax.tree.map(
             lambda c, n: jax.vmap(upd)(c, n, local_slot, in_range),
             cache_t, new_t)
-        if quant:
+        if kv_q:
             kc = dequantize_kv(cache_t["k"], cache_t["k_scale"], q_.dtype)
             vc = dequantize_kv(cache_t["v"], cache_t["v_scale"], q_.dtype)
         else:
@@ -701,7 +707,7 @@ def attn_decode_step_cp(p: dict, cfg, cache: dict, x: Array, lengths: Array,
         check_vma=True,
     )(q, new_tree, cache_tree, lengths)
     out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
-    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    out = quant.qdot("bse,ed->bsd", out, p["wo"])
     return out, new_cache
 
 
@@ -739,7 +745,7 @@ def attn_prefill(p: dict, cfg, cache: dict, x: Array, positions: Array,
             mask = mask & (kp > qp - window)
         out = attend(q, kr, vr, mask, cfg.head_dim ** -0.5)
     out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
-    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    out = quant.qdot("bse,ed->bsd", out, p["wo"])
     if s >= cache_len:
         # ring layout invariant: position p lives at slot p % cache_len, so the
         # kept tail [s-cache_len, s) must be rolled to line up with future

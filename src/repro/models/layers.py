@@ -2,7 +2,9 @@
 
 Pure-functional JAX: params are pytrees of jnp arrays, every function is
 ``f(params, x, ...) -> y``. Compute follows a bf16-weights / fp32-accumulate
-policy; norms and softmax always run in fp32.
+policy; norms and softmax always run in fp32.  Weight matmuls go through
+``core/quant.qdot`` so raw and blockwise-quantized (``QuantTensor``) weight
+leaves are interchangeable (docs/DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -11,6 +13,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import quant
 
 Array = jax.Array
 
@@ -124,10 +128,10 @@ def mlp_init(key: Array, d: int, f: int, dtype) -> dict:
 
 
 def mlp_apply(params: dict, x: Array, act: str = "silu") -> Array:
-    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
-    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    g = quant.qdot("...d,df->...f", x, params["w_gate"])
+    u = quant.qdot("...d,df->...f", x, params["w_up"])
     h = (jax.nn.gelu(g) if act == "gelu" else jax.nn.silu(g)) * u
-    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+    return quant.qdot("...f,fd->...d", h, params["w_down"])
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
 from repro.models import layers, transformer
 
 Array = jax.Array
@@ -102,7 +103,7 @@ def _embed_inputs(cfg, params, batch) -> tuple[Array, Array, Array | None, Array
 
 def _lm_head(cfg, params, x: Array) -> Array:
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+    return quant.qdot("bsd,dv->bsv", x, w, weight_dtype=x.dtype,
                       preferred_element_type=jnp.float32)
 
 

@@ -370,12 +370,47 @@ def check_serving_engine_on_mesh():
     print("PASS serving_engine_on_mesh")
 
 
+def check_quantized_weights_on_mesh():
+    """ISSUE 5: int8-quantized expert shards ride the expert-parallel
+    schedules unchanged — QuantTensor payload+scale leaves shard over the
+    expert axis through the same rank-3 in_specs, activations stay fp, and
+    the mesh engine generates the same tokens as the single-device engine
+    serving the same quantized store (which in turn is token-identical to
+    the fake-quant fp reference, tests/test_quant.py)."""
+    from repro.serving.engine import EngineConfig, ServingEngine
+    mesh = make_test_mesh(2, 4)
+    base = get_config("qwen3_moe_30b_a3b").reduced().replace(
+        capacity_factor=8.0, kv_cache_shard="none", weight_quant="int8",
+        weight_quant_block=64)
+    ecfg = EngineConfig(max_batch=2, prefill_len=8, max_cache=24,
+                        track_experts=False)
+    prompts = [np.arange(5) % base.vocab_size,
+               (np.arange(7) * 3) % base.vocab_size]
+    for ep in ("decentralized", "a2a_pipelined"):
+        cfg = base.replace(expert_parallel=ep, ep_microchunks=2)
+        outs = {}
+        for name, m in (("single", None), ("mesh", mesh)):
+            eng = ServingEngine(cfg, ecfg, rng=jax.random.PRNGKey(5), mesh=m)
+            from repro.core import quant as quant_lib
+            assert any(isinstance(l, quant_lib.QuantTensor)
+                       for l in jax.tree.leaves(
+                           eng.params,
+                           is_leaf=lambda x: isinstance(x, quant_lib.QuantTensor)))
+            for p_ in prompts:
+                eng.submit(p_, max_new_tokens=4)
+            done = sorted(eng.run_until_done(), key=lambda r: r.uid)
+            outs[name] = [r.generated for r in done]
+        assert outs["single"] == outs["mesh"], (ep, outs)
+    print("PASS quantized_weights_on_mesh")
+
+
 CHECKS = [
     check_expert_parallel_schedules,
     check_a2a_pipelined_token_exact,
     check_padded_experts_dead_on_mesh,
     check_expert_replication_overlap,
     check_serving_engine_on_mesh,
+    check_quantized_weights_on_mesh,
     check_cp_decode_int8_cache,
     check_cp_decode_matches_single_device,
     check_cp_decode_ring_window,

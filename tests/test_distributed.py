@@ -28,6 +28,7 @@ def run_checks(*names, timeout=900):
     "check_padded_experts_dead_on_mesh",
     "check_expert_replication_overlap",
     "check_serving_engine_on_mesh",
+    "check_quantized_weights_on_mesh",
     "check_cp_decode_int8_cache",
     "check_cp_decode_matches_single_device",
     "check_cp_decode_ring_window",

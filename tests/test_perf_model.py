@@ -210,6 +210,106 @@ def test_paged_concurrency_beats_contiguous_at_equal_pool_bytes():
     assert cap["gain"] == pytest.approx(8.0, rel=0.02)
 
 
+def test_weight_bytes_match_constructed_params():
+    """ISSUE 5 satellite: ``model_weight_bytes`` (and the per-layer term)
+    must equal the REAL byte count of the constructed params pytree under
+    every quant level — same validation pattern as kv_bytes_per_token,
+    via jax.eval_shape of quantize_params(model.init(...)).  Covers moe
+    (router + expert stack), dense-with-tied-embeddings + qk_norm, and
+    qkv_bias archs."""
+    import jax
+
+    from repro.core import quant
+    from repro.models.model import build_model
+
+    for arch in ("qwen3_moe_30b_a3b", "qwen3_0_6b", "stablelm_12b"):
+        for level in ("none", "int8", "int4"):
+            cfg = get_config(arch).reduced().replace(weight_quant=level)
+            m = build_model(cfg)
+            specs = jax.eval_shape(
+                lambda r, m=m, cfg=cfg: quant.quantize_params(m.init(r),
+                                                              cfg),
+                jax.random.PRNGKey(0))
+            real = quant.tree_bytes(specs)
+            assert real == pm.model_weight_bytes(cfg), (arch, level)
+    # per-layer term: L layers explain the whole model minus the shared
+    # embed/lm_head/final_norm leaves
+    cfg = get_config("qwen3_moe_30b_a3b").reduced().replace(
+        weight_quant="int8")
+    per_layer = pm.weight_bytes_per_layer(cfg)
+    d, p = cfg.d_model, 4                       # reduced params are fp32
+    shared = cfg.vocab_padded * d * p + d * p \
+        + pm.quant_matrix_bytes(d, cfg.vocab_padded, itemsize=p,
+                                quant="int8", block=cfg.weight_quant_block)
+    assert shared + cfg.num_layers * per_layer == pm.model_weight_bytes(cfg)
+    with pytest.raises(ValueError):
+        pm.weight_bytes_per_layer(get_config("mamba2_130m").reduced())
+
+
+def test_weight_bytes_match_engine_memory_stats():
+    """The analytic model and the engine's reported device bytes agree —
+    the satellite-2 cross-check wiring perf_model to memory_stats."""
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    for level in ("none", "int8", "int4"):
+        cfg = get_config("qwen3_moe_30b_a3b").reduced().replace(
+            weight_quant=level)
+        eng = ServingEngine(cfg, EngineConfig(max_batch=2, prefill_len=8,
+                                              max_cache=32))
+        ms = eng.memory_stats()
+        assert ms["weight_bytes"] == pm.model_weight_bytes(cfg), level
+        assert ms["kv_pool_bytes"] == 2 * 32 * pm.kv_bytes_per_token(
+            cfg, precision=4)
+
+
+def test_quant_levels_shrink_weight_bytes():
+    """int8 >= 3.5x and int4 >= 6x smaller than fp on the CI config (fp
+    router + embedding included in the total — the acceptance ratios),
+    and the compression ratio of the quantized kinds alone approaches the
+    ideal 4x / 8x as the block grows."""
+    cfg = get_config("qwen3_moe_30b_a3b").reduced()
+    fp = pm.model_weight_bytes(cfg, quant="none")
+    assert fp / pm.model_weight_bytes(cfg, quant="int8") >= 3.5
+    assert fp / pm.model_weight_bytes(cfg, quant="int4") >= 6.0
+    # matrix-level: scale overhead shrinks with block size
+    m8 = lambda b: pm.quant_matrix_bytes(1024, 1024, itemsize=4,
+                                         quant="int8", block=b)
+    assert m8(256) < m8(64) < pm.quant_matrix_bytes(1024, 1024, itemsize=4)
+    assert abs(pm.quant_matrix_bytes(1024, 1024, itemsize=4) / m8(512)
+               - 4.0) < 0.05
+
+
+def test_max_model_at_budget_dbrx_headline():
+    """The paper's Table-2 budget composed with the weight store: DBRX at
+    bf16 does NOT fit one 192 GB M2 Ultra (263 GB/node) but DOES at int8
+    (~136 GB); two nodes host it unquantized (the paper's own setup) —
+    and the composed capacity term hands the leftover bytes to the KV
+    pool."""
+    dbrx = get_config("dbrx")
+    one = pm.max_model_at_budget(dbrx, n_nodes=1)
+    assert not one["fits"]["none"] and one["fits"]["int8"]
+    assert one["level"] == "int8"
+    two = pm.max_model_at_budget(dbrx, n_nodes=2)
+    assert two["fits"]["none"] and two["level"] == "none"
+    assert not pm.fits_in_memory(dbrx, n_nodes=1, quant="none")
+    assert pm.fits_in_memory(dbrx, n_nodes=1, quant="int8")
+    # headroom ordering is monotone in the quant level
+    b = one["per_node_bytes"]
+    assert b["none"] > b["int8"] > b["int4"]
+    # composition with the PR-4 KV term: quantizing weights grows the KV
+    # pool and with it the concurrent-request bound
+    cap8 = pm.node_serving_capacity(dbrx, n_nodes=2, max_cache=4096,
+                                    mean_context=512, page_size=16,
+                                    quant="int8")
+    cap_fp = pm.node_serving_capacity(dbrx, n_nodes=2, max_cache=4096,
+                                      mean_context=512, page_size=16,
+                                      quant="none")
+    assert cap8["kv_pool_bytes"] > cap_fp["kv_pool_bytes"]
+    assert cap8["paged"] > cap_fp["paged"]
+    assert cap8["weight_bytes_per_node"] + cap8["kv_pool_bytes"] \
+        == pm.M2_ULTRA_MEM_BYTES
+
+
 def test_prefix_hit_ttft_skips_shared_pages_only():
     """Prefix hits shave exactly the page-aligned shared prefix off the
     modelled TTFT; a full-prompt hit still recomputes one token."""

@@ -171,6 +171,33 @@ def test_paged_cow_page_copy_is_page_sized_not_pool_sized():
     assert hlo.sized_copies(txt, min_leaf) == []
 
 
+@pytest.mark.parametrize("level", ["int8", "int4"])
+def test_donated_decode_quantized_weights_never_copies_cache_leaf(level):
+    """ISSUE 5 acceptance: the donated decode program with the quantized
+    weight store keeps the PR-2 zero-copy invariant — on-the-fly weight
+    dequantization is converts/multiplies on weight-sized buffers, never
+    a copy of a cache leaf's size, and every cache leaf still aliases its
+    donated input."""
+    txt, leaves = compiled_decode(MOE_ARCH, donate=True, weight_quant=level)
+    sizes = set(leaf_bytes(leaves))
+    offending = [c for c in hlo.sized_copies(txt, min(sizes))
+                 if c[1] in sizes]
+    assert offending == [], offending
+    assert hlo.input_output_aliases(txt) >= len(leaves)
+
+
+def test_donated_unified_step_quantized_weights_never_copies_cache_leaf():
+    """Same pin for the unified mixed-batch program under int8 weights
+    (the production serving path of the quantized store)."""
+    txt, leaves = compiled_unified(MOE_ARCH, donate=True,
+                                   weight_quant="int8")
+    sizes = set(leaf_bytes(leaves))
+    offending = [c for c in hlo.sized_copies(txt, min(sizes))
+                 if c[1] in sizes]
+    assert offending == [], offending
+    assert hlo.input_output_aliases(txt) >= len(leaves)
+
+
 def test_undonated_decode_copies_the_cache():
     """Regression contrast: without donation XLA MUST materialize the
     non-aliased cache (the paper's C1 memory-management overhead) — proves
