@@ -1,0 +1,27 @@
+"""Rule-based static analysis over the engine's compiled programs.
+
+The paper's central finding is that memory-management overhead (hidden
+cache copies) and per-message latency — not link bandwidth — dominate
+multi-node MoE inference.  PR2–PR5 encoded the corresponding invariants
+(donated zero-copy caches, bounded collective bytes, device-only routing,
+QuantTensor sibling-leaf integrity) as ad-hoc regex pins; this package
+turns them into named, CI-gated rules over two front-ends:
+
+  * compiled HLO text (``launch/hlo.py`` parser) — what XLA actually
+    scheduled, including async ``copy-start`` pairs and collectives;
+  * jaxpr traversal (``jax.make_jaxpr``) — dataflow facts such as which
+    matmuls a quantized leaf reaches, before XLA rewrites them away.
+
+Rules (see docs/DESIGN.md §9):
+  R1 donation-alias   every donated cache leaf aliases an output; no copy
+                      (sync or async) the size of a cache leaf
+  R2 collective-bytes per-kind collective bytes match core/perf_model
+  R3 retrace          engine traces stay within the documented set
+  R4 host-sync        no blocking device->host reads in the hot loop
+  R5 quant-integrity  data/scale siblings enter matmuls together; no
+                      full-weight dequantized materialization
+  R6 sharding-lint    no all-gather of expert-sharded weight leaves
+
+Run ``python -m repro.analysis`` for the CLI driver.
+"""
+from repro.analysis.framework import Finding, Report, Rule, run_rules  # noqa: F401

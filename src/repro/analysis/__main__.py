@@ -1,0 +1,117 @@
+"""CLI driver: ``python -m repro.analysis``.
+
+Traces the engine's serving programs (decode / unified / paged / int8 by
+default, reduced config so it runs on any CPU), runs every rule, prints
+the report, and exits nonzero on any error-severity finding — the CI
+``analysis`` job gates on exactly this.
+
+  python -m repro.analysis                          # all rules, all programs
+  python -m repro.analysis --programs decode,int8 --rules R1,R5
+  python -m repro.analysis --warn-only R2 --json report.json
+  python -m repro.analysis --ep 4 --data 2          # trace on a host mesh
+
+``--ep``/``--data`` fake a (data, model) device mesh via
+``--xla_force_host_platform_device_count`` (must run before jax loads, so
+this module sets XLA_FLAGS before importing anything jax-backed).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis of the engine's serving programs")
+    p.add_argument("--arch", default="qwen3_moe_30b_a3b")
+    p.add_argument("--programs", default="decode,unified,paged,int8",
+                   help="comma list of decode,unified,paged,int8")
+    p.add_argument("--rules", default="R1,R2,R3,R4,R5,R6",
+                   help="comma list of rule ids to run")
+    p.add_argument("--warn-only", default="",
+                   help="comma list of rule ids demoted to warnings")
+    p.add_argument("--json", dest="json_path", default="",
+                   help="write the machine-readable report here "
+                        "('-' for stdout)")
+    p.add_argument("--ep", type=int, default=1,
+                   help="expert (model) shards on a faked host mesh")
+    p.add_argument("--data", type=int, default=1,
+                   help="data shards on the faked host mesh")
+    return p.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    n_dev = max(args.ep, 1) * max(args.data, 1)
+    if n_dev > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n_dev}").strip()
+
+    # jax-backed imports AFTER the device-count env var is pinned
+    from repro.analysis import programs as programs_lib
+    from repro.analysis.collectives import CollectiveBudgetRule
+    from repro.analysis.donation import DonationAliasRule
+    from repro.analysis.framework import demote_findings, run_rules
+    from repro.analysis.hostsync import HostSyncRule
+    from repro.analysis.quant_integrity import QuantIntegrityRule
+    from repro.analysis.retrace import RetraceRule
+    from repro.analysis.sharding_lint import ShardingLintRule
+
+    rule_ids = [r.strip().upper() for r in args.rules.split(",") if r.strip()]
+    warn_only = {r.strip().upper()
+                 for r in args.warn_only.split(",") if r.strip()}
+    variants = [v.strip() for v in args.programs.split(",") if v.strip()]
+
+    mesh = None
+    if n_dev > 1:
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(max(args.data, 1), max(args.ep, 1))
+    # the multi-device engine path needs an EP-shardable capacity and an
+    # unsharded KV cache on the tiny reduced config (same overrides the
+    # distributed integration tests use)
+    cfg_kw = (dict(capacity_factor=8.0, kv_cache_shard="none")
+              if mesh is not None else None)
+
+    prog_rules = [r for r in (DonationAliasRule(), CollectiveBudgetRule(),
+                              QuantIntegrityRule(), ShardingLintRule())
+                  if r.rule_id in rule_ids]
+    print(f"tracing programs: {', '.join(variants)} "
+          f"(arch {args.arch}{', mesh ' + str(n_dev) + ' dev' if mesh else ''})",
+          flush=True)
+    traced = [programs_lib.trace_program(v, args.arch, mesh=mesh,
+                                         cfg_kw=cfg_kw)
+              for v in variants]
+    report = run_rules(prog_rules, traced, warn_only=warn_only)
+    report.rules = rule_ids
+
+    if "R3" in rule_ids:
+        retrace = RetraceRule()
+        kinds = [k for k, wanted in (
+            ("unified", any(v in variants
+                            for v in ("unified", "paged", "int8"))),
+            ("decode", "decode" in variants)) if wanted]
+        for variant in kinds:
+            eng = programs_lib.build_engine(variant, args.arch, mesh=mesh,
+                                            cfg_kw=cfg_kw)
+            report.findings.extend(demote_findings(
+                retrace.check_engine(eng, program=f"{variant}-engine"),
+                warn_only))
+    if "R4" in rule_ids:
+        report.findings.extend(demote_findings(
+            HostSyncRule().check_source(), warn_only))
+
+    print(report.summary())
+    if args.json_path == "-":
+        print(report.to_json())
+    elif args.json_path:
+        with open(args.json_path, "w") as fh:
+            fh.write(report.to_json())
+        print(f"report written to {args.json_path}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,67 @@
+"""R2 collective-bytes budget: the paper's latency accounting, statically.
+
+Origin: PR1 (expert-parallel schedules), paper §5.2 — expert communication
+time ≈ expert computation time, so the BYTES each schedule moves per layer
+is a pinned quantity.  ``core/perf_model.predicted_collective_bytes``
+mirrors ``core/expert_parallel``'s schedule bodies analytically; this rule
+compares those predictions against ``launch/hlo.analyze``'s per-kind,
+trip-multiplied actuals for the compiled program.
+
+On a single device the prediction is empty and the rule degrades to the
+strongest possible form: a serving program may contain NO collective at
+all above a small floor (scalar aux pmeans are below it).  On a mesh,
+predicted kinds must match within ``rel_tol``; collective kinds the model
+does not predict (e.g. attention context-parallel traffic) are reported
+as warnings rather than errors so schedule budgeting stays the gate.
+"""
+from __future__ import annotations
+
+from repro.analysis.framework import Rule
+from repro.core import perf_model
+from repro.launch import hlo
+
+
+class CollectiveBudgetRule(Rule):
+    rule_id = "R2"
+    name = "collective-bytes"
+    description = ("per-kind collective bytes match core/perf_model "
+                   "schedule predictions")
+    requires = "hlo"
+
+    def __init__(self, rel_tol: float = 0.5, abs_floor: int = 4096):
+        self.rel_tol = rel_tol
+        self.abs_floor = abs_floor
+
+    def check(self, prog):
+        findings = []
+        actual = {k: float(v)
+                  for k, v in hlo.analyze(prog.hlo_text).coll.items()}
+        pred = perf_model.predicted_collective_bytes(
+            prog.cfg, batch=prog.batch, seq=prog.seq,
+            n_exp_shards=prog.n_exp_shards,
+            n_batch_shards=prog.n_batch_shards)
+        if not pred:
+            for kind, nb in sorted(actual.items()):
+                if nb >= self.abs_floor:
+                    findings.append(self.finding(
+                        prog.name,
+                        f"{kind} moves {nb:.0f} B in a single-device "
+                        "serving program (predicted: none)",
+                        kind=kind, actual=nb, predicted=0.0))
+            return findings
+        for kind, want in sorted(pred.items()):
+            got = actual.get(kind, 0.0)
+            if abs(got - want) > self.rel_tol * want:
+                findings.append(self.finding(
+                    prog.name,
+                    f"{kind}: {got:.0f} B in HLO vs {want:.0f} B "
+                    f"predicted (rel_tol {self.rel_tol})",
+                    kind=kind, actual=got, predicted=want))
+        for kind, got in sorted(actual.items()):
+            if kind not in pred and got >= self.abs_floor:
+                findings.append(self.finding(
+                    prog.name,
+                    f"unbudgeted collective kind {kind}: {got:.0f} B "
+                    "(not part of the expert schedule's model)",
+                    severity="warning", kind=kind, actual=got))
+        return findings

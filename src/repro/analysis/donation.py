@@ -1,0 +1,68 @@
+"""R1 donation-alias lint: the zero-copy cache invariant, as a rule.
+
+Origin: PR2 (donated decode step), PR3 (unified block), PR4 (page pool).
+The paper's C1 finding is that hidden memory management — a full cache
+copy per step — dominates Apple-stack inference; our engine donates the
+cache operand of every jit and updates it in place, so the compiled
+program must (a) alias every donated cache leaf to an output in the
+module's ``input_output_alias`` header and (b) contain no copy the size
+of a cache leaf, *including async copy-start/copy-done pairs*.
+
+Leaf naming: params is argument 0 and the cache argument 1 of every jit
+body, so cache leaf i is flat entry parameter ``n_param_leaves + i`` (XLA
+prunes only unused trailing scalars, never the used weight/cache prefix —
+``TracedProgram.entry_param_count`` would drop below
+``n_param_leaves + n_cache`` if that assumption ever broke, which this
+rule reports as its own finding instead of guessing).
+"""
+from __future__ import annotations
+
+from repro.analysis.framework import Rule
+from repro.launch import hlo
+
+
+class DonationAliasRule(Rule):
+    rule_id = "R1"
+    name = "donation-alias"
+    description = ("every donated cache leaf aliases an output; no copy "
+                   "(sync or async) of cache-leaf size")
+    requires = "hlo"
+
+    def check(self, prog):
+        findings = []
+        txt = prog.hlo_text
+        n_cache = len(prog.cache_bytes)
+        if prog.entry_param_count < prog.n_param_leaves + n_cache:
+            findings.append(self.finding(
+                prog.name,
+                "entry parameter count %d < params+cache leaves %d — flat "
+                "alias numbering unverifiable (a weight or cache leaf was "
+                "pruned)" % (prog.entry_param_count,
+                             prog.n_param_leaves + n_cache)))
+            return findings
+        aliased = {p.param_number for p in hlo.input_output_alias_pairs(txt)}
+        for i, (path, nb) in enumerate(zip(prog.cache_paths,
+                                           prog.cache_bytes)):
+            pnum = prog.n_param_leaves + i
+            if pnum not in aliased:
+                findings.append(self.finding(
+                    prog.name,
+                    f"cache leaf {path} ({nb} B, entry parameter {pnum}) "
+                    "is not aliased to any output — XLA will materialize "
+                    "a fresh buffer every step (paper C1 overhead)",
+                    leaf=path, bytes=nb, param_number=pnum))
+        min_leaf = min(prog.cache_bytes)
+        copies = hlo.sized_copies(txt, min_leaf)
+        if prog.copy_exact_sizes:
+            # gather-path weight loads legitimately exceed the smallest
+            # cache leaf: only a copy of a cache leaf's EXACT size is the
+            # cache materializing (mirrors the production-config zero-copy
+            # tests)
+            sizes = set(prog.cache_bytes)
+            copies = [c for c in copies if c[1] in sizes]
+        for line, nb in copies:
+            findings.append(self.finding(
+                prog.name,
+                f"cache-sized copy ({nb} B): {line[:120]}",
+                bytes=nb, line=line))
+        return findings

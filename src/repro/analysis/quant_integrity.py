@@ -1,0 +1,220 @@
+"""R5 QuantTensor integrity: data and scale stay married.
+
+Origin: PR5 (blockwise quantized weight store, docs/DESIGN.md §8).  A
+QuantTensor is a pair of sibling pytree leaves — an int8/packed-int4
+payload and its per-block fp32 scales — and correctness rests on two
+dataflow facts the type system cannot see once jax flattens the tree:
+
+  1. every matmul that consumes the payload also consumes its OWN scale
+     (a detached or swapped scale silently rescales the weights);
+  2. the full dequantized weight is never materialized outside the
+     ``qdot`` policy point (materializing it re-spends the memory the
+     store exists to save — paper Table 2's budget).
+
+Both are checked by taint propagation over the jaxpr: each payload leaf
+seeds token ``("d", i)``, each scale ``("s", i)``; taints flow through
+every equation (recursing into scan/while/cond/pjit sub-jaxprs, with a
+fixpoint for loop carries).  At each ``dot_general`` an operand tainted
+by ``d_i`` must also carry ``s_i``.  A float output reaching leaf i's
+full logical element count while tainted by ``d_i`` is a full
+dequantized materialization; it is allowed only when every consumer is
+the dequant->dot chain itself (dot_general, or the mul/convert/
+transpose/reshape glue inside qdot) — a scan, slice, add or store
+consuming it means the weight was materialized for general use.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.analysis.framework import Rule
+
+try:  # jax >= 0.4.x keeps these importable from jax.core
+    from jax.core import ClosedJaxpr, Literal
+except ImportError:  # pragma: no cover
+    from jax.extend.core import ClosedJaxpr, Literal  # type: ignore
+
+# eqn kinds a full-size dequantized float may legally feed: the qdot
+# dequant chain (convert -> mul by repeated scales -> [layout] -> dot)
+_QDOT_CONSUMERS = frozenset(
+    {"dot_general", "mul", "convert_element_type", "transpose", "reshape"})
+
+_SUBJAXPR_CALLS = ("pjit", "closed_call", "core_call", "remat", "checkpoint",
+                   "custom_jvp_call", "custom_vjp_call", "remat_call",
+                   "named_call")
+
+
+def _sub_closed(eqn):
+    sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+    if sub is None:
+        return None
+    return sub if isinstance(sub, ClosedJaxpr) else ClosedJaxpr(sub, ())
+
+
+class _Walker:
+    def __init__(self, quant_leaves, emit):
+        self.leaves = {q.data_idx: q for q in quant_leaves}
+        self.emit = emit          # (check_key, message_kw) -> None, deduped
+        self._seen = set()
+
+    def _report(self, key, **kw):
+        if key not in self._seen:
+            self._seen.add(key)
+            self.emit(key, kw)
+
+    # -- checks -------------------------------------------------------------
+
+    def _check_dot(self, eqn, in_taints):
+        for t in in_taints:
+            scales = {i for kind, i in t if kind == "s"}
+            for kind, i in t:
+                if kind == "d" and i not in scales:
+                    q = self.leaves[i]
+                    self._report(("detached", i), leaf=q.path,
+                                 reason="dot_general operand tainted by "
+                                        f"{q.path}.data without its .scale")
+
+    def _check_materialization(self, jaxpr, env):
+        # consumers within this scope only: a full-size float flowing into
+        # a scan/slice/store here is the violation even if the sub-jaxpr
+        # then slices it finely
+        consumers: dict = {}
+        for eqn in jaxpr.eqns:
+            for a in eqn.invars:
+                if not isinstance(a, Literal):
+                    consumers.setdefault(a, []).append(eqn.primitive.name)
+        for var, taint in env.items():
+            aval = getattr(var, "aval", None)
+            if aval is None or not hasattr(aval, "dtype"):
+                continue
+            try:
+                import numpy as np
+                is_float = np.issubdtype(aval.dtype, np.inexact)
+                size = int(np.prod(aval.shape)) if aval.shape else 1
+            except Exception:  # abstract tokens etc.
+                continue
+            if not is_float:
+                continue
+            for kind, i in taint:
+                if kind != "d":
+                    continue
+                q = self.leaves[i]
+                if size < q.full_elems:
+                    continue
+                bad = [c for c in consumers.get(var, ())
+                       if c not in _QDOT_CONSUMERS]
+                if bad:
+                    self._report(
+                        ("materialized", i), leaf=q.path,
+                        reason=f"full dequantized weight ({size} elems >= "
+                               f"{q.full_elems}) of {q.path} consumed by "
+                               f"{sorted(set(bad))} — outside the qdot "
+                               "policy point")
+
+    # -- propagation --------------------------------------------------------
+
+    def walk(self, jaxpr, in_taints):
+        """Forward taint pass over one (sub)jaxpr; returns outvar taints."""
+        env: dict = {}
+
+        def read(atom):
+            return frozenset() if isinstance(atom, Literal) \
+                else env.get(atom, frozenset())
+
+        for v, t in zip(jaxpr.invars, in_taints):
+            env[v] = frozenset(t)
+        for v in jaxpr.constvars:
+            env[v] = frozenset()
+
+        for eqn in jaxpr.eqns:
+            taints = [read(a) for a in eqn.invars]
+            prim = eqn.primitive.name
+            if prim == "dot_general":
+                self._check_dot(eqn, taints)
+            if prim == "scan":
+                nc = eqn.params["num_consts"]
+                ncar = eqn.params["num_carry"]
+                body = eqn.params["jaxpr"].jaxpr
+                consts, carry = taints[:nc], list(taints[nc:nc + ncar])
+                xs = taints[nc + ncar:]
+                while True:  # fixpoint over the loop carry
+                    outs = self.walk(body, consts + carry + xs)
+                    grown = [c | o for c, o in zip(carry, outs[:ncar])]
+                    if grown == carry:
+                        break
+                    carry = grown
+                for v, t in zip(eqn.outvars, outs):
+                    env[v] = t
+                continue
+            if prim == "while":
+                cn = eqn.params["cond_nconsts"]
+                bn = eqn.params["body_nconsts"]
+                cond = eqn.params["cond_jaxpr"].jaxpr
+                body = eqn.params["body_jaxpr"].jaxpr
+                cconsts = taints[:cn]
+                bconsts = taints[cn:cn + bn]
+                carry = list(taints[cn + bn:])
+                while True:
+                    self.walk(cond, cconsts + carry)
+                    outs = self.walk(body, bconsts + carry)
+                    grown = [c | o for c, o in zip(carry, outs)]
+                    if grown == carry:
+                        break
+                    carry = grown
+                for v, t in zip(eqn.outvars, carry):
+                    env[v] = t
+                continue
+            if prim == "cond":
+                branches = eqn.params["branches"]
+                ops = taints[1:]  # invars = [pred] + operands
+                outs = None
+                for br in branches:
+                    bouts = self.walk(br.jaxpr, ops)
+                    outs = bouts if outs is None else \
+                        [a | b for a, b in zip(outs, bouts)]
+                for v, t in zip(eqn.outvars, outs or []):
+                    env[v] = t
+                continue
+            if prim in _SUBJAXPR_CALLS:
+                sub = _sub_closed(eqn)
+                if sub is not None:
+                    outs = self.walk(sub.jaxpr, taints)
+                    for v, t in zip(eqn.outvars, outs):
+                        env[v] = t
+                    continue
+            union = frozenset().union(*taints) if taints else frozenset()
+            for v in eqn.outvars:
+                env[v] = union
+
+        self._check_materialization(jaxpr, env)
+        return [read(v) for v in jaxpr.outvars]
+
+
+def check_closed_jaxpr(closed, quant_leaves, emit):
+    """Seed invar taints from the quant leaf map and run the walker."""
+    n = len(closed.jaxpr.invars)
+    seeds = [frozenset() for _ in range(n)]
+    for q in quant_leaves:
+        if q.data_idx < n:
+            seeds[q.data_idx] = frozenset({("d", q.data_idx)})
+        if q.scale_idx < n:
+            seeds[q.scale_idx] = frozenset({("s", q.data_idx)})
+    _Walker(quant_leaves, emit).walk(closed.jaxpr, seeds)
+
+
+class QuantIntegrityRule(Rule):
+    rule_id = "R5"
+    name = "quant-integrity"
+    description = ("data/scale siblings enter matmuls together; no full "
+                   "dequantized weight outside qdot")
+    requires = "jaxpr"
+
+    def check(self, prog):
+        if not prog.quant_leaves:
+            return []
+        findings = []
+
+        def emit(key, kw):
+            findings.append(self.finding(prog.name, kw.pop("reason"), **kw))
+
+        check_closed_jaxpr(prog.jaxpr(), prog.quant_leaves, emit)
+        return findings

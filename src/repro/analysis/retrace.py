@@ -1,0 +1,82 @@
+"""R3 retrace sanitizer: the engine compiles its documented set, nothing more.
+
+Origin: PR3 (unified scheduler) and the BENCH_serving dispatch-bound soft
+spot — on CPU-class backends a silent retrace costs more than hundreds of
+steps, and the classic regressions (a host int leaking into a traced
+shape, a static flag toggling per step, ragged chunk widths) all manifest
+as trace counts creeping past the documented set.
+
+``ServingEngine.trace_counts`` increments at TRACE time inside each jit
+body; the documented steady-state budget per engine mode:
+
+  * unified:   2 traces of ``unified`` — the chunk_len-wide mixed block
+               and the width-1 pure-decode block (1 when chunk_len == 1);
+  * paged:     + 1 ``copy_pages`` (copy-on-write helper);
+  * reference: 1 prefill (batched or per-slot) + 1 ``decode``;
+  * sampling:  first stochastic request flips the static flag and doubles
+               each budget (the one documented retrace).
+
+``drive_engine`` pushes an engine through admission / chunked-prefill /
+decode transitions (the transitions that historically retraced); the rule
+then compares counts against the budget.  Budgets are upper bounds — a
+workload that never hits pure decode traces less, which is fine.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.framework import Rule
+
+
+def expected_trace_budget(eng) -> dict:
+    """Max traces per jit body for this engine's configuration."""
+    if getattr(eng, "unified", False):
+        budget = {"unified": 2 if eng.chunk_len > 1 else 1}
+        if getattr(eng, "paged", False):
+            budget["copy_pages"] = 1
+    else:
+        key = ("prefill_batch" if eng.ecfg.batched_prefill
+               else "prefill_one")
+        budget = {key: 1, "decode": 1}
+    mult = 2 if getattr(eng, "_sampling", False) else 1
+    return {k: v * mult for k, v in budget.items()}
+
+
+def drive_engine(eng, *, rounds: int = 2, prompt_len: int = 6,
+                 new_tokens: int = 4, seed: int = 0) -> None:
+    """Admission -> chunked prefill -> mixed -> pure-decode transitions,
+    twice over, so any shape-dependent retrace has every chance to fire."""
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        for _ in range(eng.ecfg.max_batch):
+            eng.submit(rng.integers(0, 50, prompt_len),
+                       max_new_tokens=new_tokens)
+        eng.run_until_done()
+
+
+class RetraceRule(Rule):
+    rule_id = "R3"
+    name = "retrace"
+    description = "no jit retrace beyond the documented set"
+    requires = "engine"
+
+    def __init__(self, workload=drive_engine):
+        self.workload = workload
+
+    def check_engine(self, eng, program: str = "engine") -> list:
+        """Drive ``eng`` (must be freshly built: trace_counts at zero —
+        note .lower() also traces) and audit its trace counts."""
+        if self.workload is not None:
+            self.workload(eng)
+        budget = expected_trace_budget(eng)
+        findings = []
+        for key, count in sorted(eng.trace_counts.items()):
+            allowed = budget.get(key, 0)
+            if count > allowed:
+                findings.append(self.finding(
+                    program,
+                    f"jit body '{key}' traced {count}x (documented budget "
+                    f"{allowed}) — a silent recompile is eating dispatch "
+                    "latency",
+                    body=key, count=count, budget=allowed))
+        return findings

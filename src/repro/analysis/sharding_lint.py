@@ -1,0 +1,58 @@
+"""R6 sharding lint: expert-sharded weights never travel.
+
+Origin: PR1 / docs/DESIGN.md §5 — every schedule moves ACTIVATIONS
+between expert shards; the expert weights themselves stay put (that is
+the entire point of expert parallelism, and the paper's Table 2 memory
+budget depends on it).  A resharding regression — a PartitionSpec typo,
+a schedule accidentally closing over replicated weights — shows up in
+HLO as an ``all-gather`` whose result is a full expert-weight slice.
+
+The rule flags any all-gather whose gathered result reaches one layer's
+expert-weight slice (the smallest expert leaf divided by its leading
+stacked-layer dim — per-layer gathers inside the scan body are what a
+bad spec produces).  Activation gathers (centralized comm 1) are orders
+of magnitude below that threshold.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.analysis.framework import Rule
+from repro.launch import hlo
+
+
+def expert_gather_threshold(prog) -> int | None:
+    """Smallest per-layer expert-weight slice in bytes (None: no experts)."""
+    flat = jax.tree_util.tree_flatten_with_path(prog.engine.params)[0]
+    sizes = []
+    n_layers = max(int(getattr(prog.cfg, "num_layers", 1)), 1)
+    for path, leaf in flat:
+        if "experts" not in jax.tree_util.keystr(path):
+            continue
+        nb = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        # stacked leaves are (L, E, ...): a per-layer gather moves nb / L
+        sizes.append(nb // n_layers if leaf.ndim >= 3 else nb)
+    return min(sizes) if sizes else None
+
+
+class ShardingLintRule(Rule):
+    rule_id = "R6"
+    name = "sharding-lint"
+    description = "no all-gather of expert-sharded weight leaves"
+    requires = "hlo"
+
+    def check(self, prog):
+        threshold = expert_gather_threshold(prog)
+        if threshold is None:
+            return []
+        findings = []
+        for kind, nb, line in hlo.collective_ops(prog.hlo_text):
+            if kind == "all-gather" and nb >= threshold:
+                findings.append(self.finding(
+                    prog.name,
+                    f"all-gather of {nb} B >= expert-weight slice "
+                    f"({threshold} B) — expert weights must stay sharded: "
+                    f"{line[:120]}",
+                    bytes=nb, threshold=threshold, line=line))
+        return findings

@@ -555,3 +555,105 @@ PAPER_TABLE5 = {
 
 def paper_table5() -> dict[str, float]:
     return {k: tp / (n * price) for k, (n, tp, price) in PAPER_TABLE5.items()}
+
+
+# ---------------------------------------------------------------------------
+# per-kind collective-byte predictions (analysis rule R2)
+# ---------------------------------------------------------------------------
+# The paper's §5.2 measurement — expert communication time ≈ expert
+# computation time, dominated by per-message latency — makes the BYTES each
+# schedule moves a first-class invariant: a schedule regression (an extra
+# gather, a fallback silently engaging) shows up as a collective-byte
+# mismatch long before a wall-clock benchmark notices.  This predicts, per
+# device and per forward pass, the bytes each HLO collective kind should
+# move for one (batch, seq) block, mirroring core/expert_parallel.py's
+# schedule bodies exactly (including their decode fallbacks).  The analysis
+# CLI (repro.analysis R2) compares these numbers against
+# launch/hlo.analyze()'s trip-multiplied per-kind actuals.
+
+
+def predicted_collective_bytes(cfg, *, batch: int, seq: int,
+                               n_exp_shards: int = 1,
+                               n_batch_shards: int = 1,
+                               itemsize: int | None = None,
+                               n_moe_layers: int | None = None,
+                               include_tp: bool = True) -> dict:
+    """Expected per-device collective bytes by HLO kind for one forward of
+    a (batch, seq) token block under ``cfg.expert_parallel``.
+
+    Bytes are the collective's *operand* bytes (what launch/hlo.analyze
+    bills), per device, summed over MoE layers.  Returns {} when there is
+    no expert axis — a single-device serving program must contain no
+    collectives at all, which R2 enforces with a floor instead of a
+    tolerance.  Besides the expert schedule, ``include_tp`` adds the
+    serve-mode tensor-parallel terms launch/sharding.params_pspec induces
+    on the same "model" axis (vocab-sharded embedding psum, head-sharded
+    attention-output psum, flat-sharded GQA k/v gathers); tiny aux pmeans
+    (scalars) stay below any sensible floor and are omitted.
+    """
+    if n_exp_shards <= 1 or not getattr(cfg, "is_moe", False):
+        return {}
+    from repro.core import moe as moe_lib  # lazy: keep module import-light
+    iz = itemsize if itemsize is not None else _itemsize(cfg)
+    d = cfg.d_model
+    k = cfg.experts_per_token
+    e_pad = cfg.num_experts_padded
+    L = n_moe_layers if n_moe_layers is not None else cfg.num_layers
+    n = n_exp_shards
+    # expert_parallel.moe_layer drops the batch axes when they don't divide
+    bs = n_batch_shards if n_batch_shards >= 1 and batch % max(n_batch_shards, 1) == 0 else 1
+    t = batch * seq
+    t_bs = max(t // bs, 1)              # tokens per batch shard
+
+    def decentralized():
+        # one psum of the (t_loc, d) expert output per layer
+        return {"all-reduce": float(L * t_bs * d * iz)}
+
+    def centralized():
+        if seq % n != 0:
+            # decode fallback: psum + value-preserving ring permute
+            nb = float(L * t_bs * d * iz)
+            return {"all-reduce": nb, "collective-permute": nb}
+        t_loc = t_bs // n
+        # comm 1 gathers the activation block AND its bool token mask
+        return {"all-gather": float(L * t_loc * (d * iz + 1)),
+                "reduce-scatter": float(L * t_bs * d * iz)}
+
+    def a2a(m: int = 1):
+        if seq % n != 0:
+            return decentralized()      # single-token decode fallback
+        t_loc = t_bs // n
+        if m > 1 and (t_loc % m != 0 or t_loc // m < 1):
+            m = 1                       # a2a_pipelined -> plain a2a
+        cap = moe_lib.round_capacity(max(t_loc // m, 1), k, e_pad,
+                                     cfg.capacity_factor)
+        e_local = e_pad // n
+        # dispatch + combine all_to_all of (n, e_local*cap, d) per chunk
+        return {"all-to-all": float(2 * L * m * n * e_local * cap * d * iz)}
+
+    sched = getattr(cfg, "expert_parallel", "decentralized")
+    if sched == "centralized":
+        out = centralized()
+    elif sched == "a2a":
+        out = a2a()
+    elif sched == "a2a_pipelined":
+        out = a2a(max(getattr(cfg, "ep_microchunks", 1), 1))
+    else:
+        out = decentralized()
+
+    if include_tp:
+        def add(kind, nb):
+            out[kind] = out.get(kind, 0.0) + float(nb)
+        La = cfg.num_layers          # attention sits in every layer
+        # vocab-sharded embedding table -> one psum of the (t_loc, d)
+        # input activations per forward
+        add("all-reduce", t_bs * d * iz)
+        # head-sharded attention: per-layer psum of wo's partial outputs
+        if cfg.num_heads % n == 0:
+            add("all-reduce", La * t_bs * d * iz)
+        # GQA k/v sharded on the flat head*dim axis: each device gathers
+        # the new tokens' k and v before the (replicated) cache update
+        kv_flat = cfg.num_kv_heads * cfg.head_dim
+        if cfg.num_kv_heads % n != 0 and kv_flat % n == 0:
+            add("all-gather", 2 * La * t_bs * (kv_flat // n) * iz)
+    return out

@@ -338,35 +338,121 @@ def breakdown(hlo_text: str, top: int = 20) -> list[tuple[str, float, float]]:
 
 
 def sized_copies(hlo_text: str, min_bytes: int) -> list[tuple[str, int]]:
-    """Every ``copy`` instruction whose result is >= ``min_bytes``, as
-    (stripped instruction line, result bytes).
+    """Every ``copy`` / ``copy-start`` instruction whose destination buffer
+    is >= ``min_bytes``, as (stripped instruction line, destination bytes).
 
-    The zero-copy serving regression (tests/test_zero_copy.py) uses this on
-    the compiled decode step: with the cache donated and updated via
-    dynamic_update_slice on a scan carry, the program must contain no copy
-    the size of a full cache leaf — XLA's way of materializing either a
-    non-aliased input (the paper's C1 memory-management overhead) or a
-    gqa_repeat of the cache."""
+    The zero-copy serving regression (tests/test_zero_copy.py and analysis
+    rule R1) uses this on the compiled decode step: with the cache donated
+    and updated via dynamic_update_slice on a scan carry, the program must
+    contain no copy the size of a full cache leaf — XLA's way of
+    materializing either a non-aliased input (the paper's C1
+    memory-management overhead) or a gqa_repeat of the cache.
+
+    Async copies count too: a ``copy-start`` moves the same bytes as a plain
+    ``copy``, it just overlaps the transfer — its result is a
+    ``(dest, src, context)`` tuple, so the destination is the first result
+    shape.  The matching ``copy-done`` only unpacks that tuple and is
+    skipped (counting both would double-bill the pair)."""
     out = []
     for raw in hlo_text.splitlines():
         line = raw.strip()
-        m = re.search(r"=\s*(" + "|".join(_DTYPE_BYTES) +
-                      r")\[([0-9,]*)\]\S*\s+copy\(", line)
+        m = _INSTR_RE.match(line)
         if not m:
             continue
-        nb = shape_bytes(m.group(1), m.group(2))
+        _, result_part, opcode, _ = m.groups()
+        if opcode not in ("copy", "copy-start"):
+            continue
+        shapes = _SHAPE_RE.findall(result_part)
+        if not shapes:
+            continue
+        nb = shape_bytes(*shapes[0])
         if nb >= min_bytes:
             out.append((line, nb))
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class AliasPair:
+    """One entry of the module's ``input_output_alias`` map.
+
+    ``param_number`` is the flat entry-parameter index; ``param_index`` /
+    ``output_index`` are tuple paths inside that parameter / the result
+    tuple (empty for non-nested shapes)."""
+    output_index: tuple
+    param_number: int
+    param_index: tuple
+    kind: str  # "may-alias" | "must-alias"
+
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([0-9,\s]*)\}\s*:\s*\(\s*(\d+)\s*,\s*\{([0-9,\s]*)\}\s*,"
+    r"\s*(may-alias|must-alias)\s*\)")
+
+
+def _int_tuple(csv: str) -> tuple:
+    return tuple(int(x) for x in csv.replace(" ", "").split(",") if x)
+
+
+def input_output_alias_pairs(hlo_text: str) -> list[AliasPair]:
+    """The donated-parameter alias map from the module header, as actual
+    (output, param) pairs — so a lint can name WHICH donated leaf failed to
+    alias, not just count survivors.
+
+    The map is extracted by brace matching from ``input_output_alias={``
+    onward (no assumption about which attribute follows it in the header)."""
+    key = "input_output_alias={"
+    start = hlo_text.find(key)
+    if start < 0:
+        return []
+    i = start + len(key) - 1  # position of the opening brace
+    depth = 0
+    body = None
+    for j in range(i, len(hlo_text)):
+        ch = hlo_text[j]
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                body = hlo_text[i + 1:j]
+                break
+    if body is None:
+        return []
+    return [
+        AliasPair(_int_tuple(m.group(1)), int(m.group(2)),
+                  _int_tuple(m.group(3)), m.group(4))
+        for m in _ALIAS_ENTRY_RE.finditer(body)
+    ]
+
+
 def input_output_aliases(hlo_text: str) -> int:
     """Number of donated-parameter aliases in the module header (0 when the
     jit was compiled without ``donate_argnums`` or donation was unusable)."""
-    m = re.search(r"input_output_alias=\{(.*?)\}\s*,\s*entry", hlo_text)
-    if not m:
-        return 0
-    return len(re.findall(r"(?:may|must)-alias", m.group(1)))
+    return len(input_output_alias_pairs(hlo_text))
+
+
+def collective_ops(hlo_text: str) -> list[tuple[str, int, str]]:
+    """Every collective instruction as (kind, dest bytes, stripped line).
+
+    ``kind`` is the base opcode (``all-gather-start`` -> ``all-gather``);
+    the matching ``-done`` halves are skipped so async pairs are billed
+    once.  ``dest bytes`` is the largest result buffer — for an all-gather
+    that is the gathered (unsharded) array, which is what the sharding lint
+    (R6) compares against full expert-weight leaf sizes."""
+    out = []
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _, result_part, opcode, _ = m.groups()
+        base = opcode.replace("-start", "").replace("-done", "")
+        if base not in _COLLECTIVES or opcode.endswith("-done"):
+            continue
+        shapes = _SHAPE_RE.findall(result_part)
+        nb = max((shape_bytes(dt, d) for dt, d in shapes), default=0)
+        out.append((base, nb, line))
+    return out
 
 
 def analyze(hlo_text: str) -> Totals:

@@ -312,6 +312,15 @@ class ServingEngine:
         self._sample_key = jax.random.PRNGKey(self.ecfg.sample_seed)
         self._step_idx = 0
         self._admit_stalled = False
+        # Retrace accounting (analysis rule R3): each jit body bumps its
+        # counter at TRACE time, so this Counter records how many programs
+        # XLA specialized since engine birth.  The documented steady-state
+        # set: unified traces at widths chunk_len and 1 (the pure-decode
+        # block), reference mode traces prefill once and decode once, paged
+        # mode adds one copy_pages trace, and flipping the static sampling
+        # flag doubles each — anything beyond that is a silent recompile
+        # eating dispatch latency.  Note ``.lower()`` on a jit also traces.
+        self.trace_counts: collections.Counter = collections.Counter()
         # cache is argument 1 of every jit body; self.cache is rebound to the
         # output before the next dispatch, so donating it is always safe.
         donate = (1,) if self.ecfg.donate_buffers else ()
@@ -393,6 +402,7 @@ class ServingEngine:
         the contiguous cache and the (B, max_blocks) page map on the paged
         pool (an undonated host snapshot, like ``lengths``).  Returns
         (last_tok', cache', routing (L, B*chunk_len, K))."""
+        self.trace_counts["unified"] += 1
         tok0 = jnp.where(is_decode, last_tok, tokens[:, 0])
         tokens = jnp.concatenate([tok0[:, None], tokens[:, 1:]], axis=1)
         # context_len pins the windowing decision to the LOGICAL context
@@ -414,6 +424,7 @@ class ServingEngine:
         pages ``src`` into ``dst`` across every layer and cache leaf.  The
         copy moves ``n * page_size`` rows — page-sized traffic, never a
         pool-sized buffer — and the pool stays donated/aliased."""
+        self.trace_counts["copy_pages"] += 1
         return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), cache)
 
     def _prefill_batch(self, params, cache, tokens, admit_mask, last_tok,
@@ -426,6 +437,7 @@ class ServingEngine:
         so in-flight slots keep their state.  Returns (last_tok', cache',
         routing) with last_tok' holding each admitted row's first sampled
         token."""
+        self.trace_counts["prefill_batch"] += 1
         tmask = jnp.broadcast_to(admit_mask[:, None], tokens.shape)
         logits, new_cache, routing = self.model.prefill_routed(
             params, {"tokens": tokens, "token_mask": tmask}, cache, self.mesh)
@@ -454,6 +466,7 @@ class ServingEngine:
         ``lengths``, so any stale tail beyond the prompt is never attended —
         the same invariant the batched path relies on when it recomputes
         in-flight rows under the admit mask."""
+        self.trace_counts["prefill_one"] += 1
         one_cache = jax.tree.map(
             lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
             if a.ndim >= 2 else a, cache)
@@ -471,6 +484,7 @@ class ServingEngine:
 
     def _decode(self, params, cache, last_tok, lengths, active_mask,
                 temps, topks, step_idx, sampling):
+        self.trace_counts["decode"] += 1
         logits, cache, routing = self.model.decode_step_routed(
             params, cache, {"tokens": last_tok[:, None], "lengths": lengths,
                             "token_mask": active_mask[:, None]},

@@ -1,0 +1,323 @@
+"""ISSUE 6: the static analyzer (repro.analysis) — clean on main, and every
+rule provably fires on a planted violation.
+
+Rules R1/R2/R6 are exercised against the real compiled decode program (one
+shared trace) with violations spliced into its HLO text; R3 against a live
+engine pushed through an undocumented retrace; R4 against planted engine
+source; R5 against hand-built jaxprs around core/quant plus the real int8
+unified jaxpr.  The CLI test runs the module end to end and checks the
+machine-readable report CI gates on.
+"""
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import framework
+from repro.analysis import programs as programs_lib
+from repro.analysis.collectives import CollectiveBudgetRule
+from repro.analysis.donation import DonationAliasRule
+from repro.analysis.hostsync import HostSyncRule
+from repro.analysis.quant_integrity import check_closed_jaxpr
+from repro.analysis.retrace import RetraceRule, expected_trace_budget
+from repro.analysis.sharding_lint import ShardingLintRule, \
+    expert_gather_threshold
+from repro.configs.base import get_config
+from repro.core import perf_model, quant
+
+ARCH = "qwen3_moe_30b_a3b"
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def decode_prog():
+    return programs_lib.trace_program("decode", ARCH)
+
+
+def _splice_into_entry(prog, line):
+    """A copy of ``prog`` with ``line`` planted inside the ENTRY body."""
+    lines = prog.hlo_text.splitlines()
+    i = next(j for j, l in enumerate(lines)
+             if l.lstrip().startswith("ENTRY"))
+    lines.insert(i + 1, "  " + line)
+    return dataclasses.replace(prog, hlo_text="\n".join(lines))
+
+
+# ---------------------------------------------------------------------------
+# framework
+
+
+class _BoomRule(framework.Rule):
+    rule_id = "RX"
+    name = "boom"
+
+    def check(self, prog):
+        return [self.finding(prog.name, "boom", tag=1)]
+
+
+def test_framework_report_and_warn_only():
+    progs = [SimpleNamespace(name="p1"), SimpleNamespace(name="p2")]
+    rep = framework.run_rules([_BoomRule()], progs)
+    assert not rep.ok and len(rep.errors) == 2 and rep.by_rule("RX")
+    demoted = framework.run_rules([_BoomRule()], progs, warn_only={"RX"})
+    assert demoted.ok and len(demoted.warnings) == 2
+    d = json.loads(demoted.to_json())
+    assert d["ok"] and d["n_warnings"] == 2
+    assert d["findings"][0]["detail"] == {"tag": 1}
+    assert "RX" in str(demoted.findings[0])
+
+
+# ---------------------------------------------------------------------------
+# R1 donation-alias (clean/undonated cases live in test_zero_copy.py)
+
+
+def test_r1_flags_every_leaf_when_alias_header_unparsable(decode_prog):
+    broken = dataclasses.replace(
+        decode_prog,
+        hlo_text=decode_prog.hlo_text.replace(
+            "input_output_alias={", "input_output_alias_disabled={", 1))
+    findings = DonationAliasRule().check(broken)
+    missing = [f for f in findings if "leaf" in f.detail]
+    assert len(missing) == len(decode_prog.cache_bytes)
+    # findings name the exact flat parameter so the fix is mechanical
+    assert all(f.detail["param_number"] >= decode_prog.n_param_leaves
+               for f in missing)
+
+
+def test_r1_flags_planted_async_cache_copy(decode_prog):
+    nb = max(decode_prog.cache_bytes)
+    elems = nb // 4
+    planted = _splice_into_entry(
+        decode_prog,
+        f"%cs.999 = (f32[{elems}]{{0}}, f32[{elems}]{{0}}, u32[]) "
+        "copy-start(%nothing)")
+    findings = DonationAliasRule().check(planted)
+    assert any(f.detail.get("bytes") == nb and "copy-start" in
+               f.detail.get("line", "") for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# R2 collective-bytes
+
+
+def test_r2_clean_on_single_device(decode_prog):
+    assert CollectiveBudgetRule().check(decode_prog) == []
+
+
+def test_r2_flags_planted_collective(decode_prog):
+    planted = _splice_into_entry(
+        decode_prog,
+        "%pl.999 = f32[4,4096]{1,0} all-reduce(%nothing), replica_groups={}")
+    findings = CollectiveBudgetRule().check(planted)
+    assert [f.detail["kind"] for f in findings] == ["all-reduce"]
+    assert findings[0].severity == "error"
+    assert findings[0].detail["actual"] == 4 * 4096 * 4
+
+
+def test_predicted_collective_bytes_schedules():
+    cfg = get_config(ARCH).reduced()
+    iz, d, L = 4, cfg.d_model, cfg.num_layers
+    t_bs = 2 * 4 // 2                    # batch=2, seq=4, 2 batch shards
+    kw = dict(batch=2, seq=4, n_exp_shards=4, n_batch_shards=2)
+    assert perf_model.predicted_collective_bytes(cfg, batch=2, seq=4) == {}
+    dec = perf_model.predicted_collective_bytes(cfg, include_tp=False, **kw)
+    assert dec == {"all-reduce": float(L * t_bs * d * iz)}
+    cen = perf_model.predicted_collective_bytes(
+        cfg.replace(expert_parallel="centralized"), include_tp=False, **kw)
+    assert cen["reduce-scatter"] == float(L * t_bs * d * iz)
+    assert cen["all-gather"] == float(L * (t_bs // 4) * (d * iz + 1))
+    a2a = perf_model.predicted_collective_bytes(
+        cfg.replace(expert_parallel="a2a"), include_tp=False, **kw)
+    assert set(a2a) == {"all-to-all"} and a2a["all-to-all"] > 0
+    # decode (seq=1): centralized falls back to psum + ring permute
+    cen1 = perf_model.predicted_collective_bytes(
+        cfg.replace(expert_parallel="centralized"), batch=2, seq=1,
+        n_exp_shards=4, n_batch_shards=2, include_tp=False)
+    assert cen1["all-reduce"] == cen1["collective-permute"] > 0
+
+
+def test_predicted_collective_bytes_tp_terms():
+    cfg = get_config(ARCH).reduced()
+    iz, d, L = 4, cfg.d_model, cfg.num_layers
+    t_bs = 2 * 4 // 2
+    kw = dict(batch=2, seq=4, n_exp_shards=4, n_batch_shards=2)
+    base = perf_model.predicted_collective_bytes(cfg, include_tp=False, **kw)
+    tp = perf_model.predicted_collective_bytes(cfg, **kw)
+    extra = t_bs * d * iz                          # vocab-sharded embedding
+    if cfg.num_heads % 4 == 0:
+        extra += L * t_bs * d * iz                 # per-layer wo psum
+    assert tp["all-reduce"] == base["all-reduce"] + extra
+    kv_flat = cfg.num_kv_heads * cfg.head_dim
+    if cfg.num_kv_heads % 4 and kv_flat % 4 == 0:
+        assert tp["all-gather"] == float(
+            2 * L * t_bs * (kv_flat // 4) * iz)
+
+
+# ---------------------------------------------------------------------------
+# R3 retrace
+
+
+def test_r3_clean_then_flags_undocumented_width():
+    eng = programs_lib.build_engine("unified", ARCH)
+    rule = RetraceRule()
+    assert rule.check_engine(eng) == []          # documented set only
+    assert expected_trace_budget(eng) == {"unified": 2}
+    # a ragged chunk width (neither chunk_len nor 1) forces a retrace
+    b = eng.ecfg.max_batch
+    ivec = jnp.zeros((b,), jnp.int32)
+    bvec = jnp.zeros((b,), bool)
+    fvec = jnp.zeros((b,), jnp.float32)
+    eng._jit_unified(eng.params, eng.cache, jnp.zeros((b, 3), jnp.int32),
+                     ivec, ivec, ivec, None, bvec, bvec, fvec, ivec,
+                     jnp.zeros((), jnp.int32), False)
+    findings = RetraceRule(workload=None).check_engine(eng)
+    assert [f.detail["body"] for f in findings] == ["unified"]
+    assert findings[0].detail["count"] == 3
+
+
+# ---------------------------------------------------------------------------
+# R4 host-sync
+
+_PLANTED_SOURCE = '''
+class Fake:
+    def step(self):
+        out = self._jit_decode(self.params, self.cache)
+        tok = out
+        n = int(self.last_tok[0])
+        v = tok.item()
+        w = np.asarray(self.cache)
+        if tok:
+            pass
+        self.cache.block_until_ready()
+        if self.ecfg.async_steps > 0:
+            self.cache.block_until_ready()
+
+    def _harvest(self):
+        return self.last_tok.item()
+'''
+
+
+def test_r4_clean_on_engine_source():
+    findings = HostSyncRule().check_source()
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_r4_flags_planted_syncs():
+    findings = HostSyncRule().check_source(_PLANTED_SOURCE)
+    whats = [f.detail["what"] for f in findings]
+    assert "int() on a device array" in whats
+    assert ".item() on a device array" in whats
+    assert "np.asarray() on a device array" in whats
+    assert "implicit bool() of a device array in a branch test" in whats
+    # exactly one unguarded block_until_ready — the async_steps-guarded
+    # one is the documented sync point and must pass
+    assert len([w for w in whats if "block_until_ready" in w]) == 1
+    # _harvest is the allowed boundary and is never scanned
+    assert all(f.detail["method"] == "step" for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# R5 quant integrity
+
+
+def _quant_weight(d=64, dout=48, block=32):
+    w = jnp.linspace(-1.0, 1.0, d * dout).reshape(d, dout)
+    q, s = quant.absmax_quantize(w, bits=8, block=block, axis=-2)
+    return quant.QuantTensor(q, s, 8, block, d, "float32")
+
+
+def _r5_keys(fn, *args):
+    qt = args[-1]
+    leaves = programs_lib.quant_leaf_map((args[0], qt))
+    assert leaves and leaves[0].data_idx == 1
+    found = []
+    check_closed_jaxpr(jax.make_jaxpr(fn)(*args), leaves,
+                       lambda key, kw: found.append(key))
+    return found
+
+
+def test_r5_clean_on_qdot():
+    x = jnp.ones((4, 64))
+    assert _r5_keys(lambda x, qt: quant.qdot("td,dk->tk", x, qt),
+                    x, _quant_weight()) == []
+
+
+def test_r5_flags_detached_scale():
+    x = jnp.ones((4, 64))
+
+    def bad(x, qt):
+        return x @ qt.data.astype(jnp.float32)   # dequant without scale
+
+    assert ("detached", 1) in _r5_keys(bad, x, _quant_weight())
+
+
+def test_r5_flags_full_materialization_outside_qdot():
+    x = jnp.ones((4, 64))
+
+    def bad(x, qt):
+        scale = jnp.repeat(qt.scale, qt.block, axis=-2)
+        w = qt.data.astype(jnp.float32) * scale  # full dequantized weight
+        w = w + 0.0                              # escapes the qdot chain
+        return x @ w
+
+    assert ("materialized", 1) in _r5_keys(bad, x, _quant_weight())
+
+
+def test_r5_clean_on_real_int8_unified_program():
+    eng = programs_lib.build_engine("int8", ARCH)
+    leaves = programs_lib.quant_leaf_map(eng.params)
+    assert leaves, "int8 engine must hold QuantTensor leaves"
+    b = eng.ecfg.max_batch
+    ivec = jnp.zeros((b,), jnp.int32)
+    bvec = jnp.zeros((b,), bool)
+    fvec = jnp.zeros((b,), jnp.float32)
+    closed = jax.make_jaxpr(eng._unified, static_argnums=(12,))(
+        eng.params, eng.cache, jnp.zeros((b, eng.chunk_len), jnp.int32),
+        ivec, ivec, ivec, None, bvec, bvec, fvec, ivec,
+        jnp.zeros((), jnp.int32), False)
+    found = []
+    check_closed_jaxpr(closed, leaves, lambda key, kw: found.append(key))
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# R6 sharding lint
+
+
+def test_r6_clean_and_flags_planted_expert_gather(decode_prog):
+    assert ShardingLintRule().check(decode_prog) == []
+    thr = expert_gather_threshold(decode_prog)
+    assert thr and thr > 0
+    planted = _splice_into_entry(
+        decode_prog,
+        f"%eg.999 = f32[{thr // 4}]{{0}} all-gather(%nothing), "
+        "dimensions={0}")
+    findings = ShardingLintRule().check(planted)
+    assert len(findings) == 1 and findings[0].detail["bytes"] >= thr
+
+
+# ---------------------------------------------------------------------------
+# CLI
+
+
+def test_cli_end_to_end(tmp_path):
+    out = tmp_path / "report.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--programs", "decode",
+         "--rules", "R1,R2,R4,R6", "--json", str(out)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rep = json.loads(out.read_text())
+    assert rep["ok"] and rep["n_errors"] == 0
+    assert rep["rules"] == ["R1", "R2", "R4", "R6"]
+    assert rep["programs"] == ["decode"]

@@ -35,6 +35,7 @@ def run_checks(*names, timeout=900):
     "check_sharded_train_step_matches_single",
     "check_params_pspec_structure",
     "check_data_sharded_batch",
+    "check_analysis_rules_on_mesh",
 ])
 def test_distributed(check):
     out = run_checks(check)

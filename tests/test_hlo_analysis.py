@@ -71,3 +71,217 @@ def test_hbm_bytes_less_than_raw():
 
     t = hlo.analyze(jax.jit(f).lower(x, w).compile().as_text())
     assert 0 < t.hbm_bytes <= t.bytes
+
+
+# ---------------------------------------------------------------------------
+# sized_copies: async copy-start/copy-done pairs count once (analysis R1)
+
+_ASYNC_COPY_HLO = """
+HloModule async_copy, input_output_alias={ {0}: (0, {}, may-alias) }
+
+ENTRY %main (p0: f32[32]) -> f32[32] {
+  %p0 = f32[32]{0} parameter(0)
+  %copy-start.1 = (f32[32]{0}, f32[32]{0}, u32[]) copy-start(%p0)
+  %cdone.1 = f32[32]{0} copy-done(%copy-start.1)
+  %small = f32[4]{0} slice(%cdone.1), slice={[0:4]}
+  %small-copy = f32[4]{0} copy(%small)
+  ROOT %out = f32[32]{0} copy(%cdone.1)
+}
+"""
+
+
+def test_sized_copies_counts_copy_start_once():
+    hits = hlo.sized_copies(_ASYNC_COPY_HLO, 128)
+    # the async pair bills once (at copy-start, dest = first tuple element)
+    # plus the ROOT sync copy; the 16-byte copy is below threshold
+    assert len(hits) == 2
+    assert all(nb == 128 for _, nb in hits)
+    assert any("copy-start" in line for line, _ in hits)
+    assert not any("copy-done" in line for line, _ in hits)
+    assert set(hlo.sized_copies(_ASYNC_COPY_HLO, 16)) == set(hits) | {
+        ("%small-copy = f32[4]{0} copy(%small)", 16)}
+
+
+def test_sized_copies_real_donation_contrast():
+    x = jnp.zeros((64, 64))
+
+    def f(buf, upd):
+        return jax.lax.dynamic_update_slice(buf, upd, (0, 0))
+
+    upd = jnp.ones((1, 64))
+    undonated = jax.jit(f).lower(x, upd).compile().as_text()
+    donated = jax.jit(f, donate_argnums=(0,)).lower(x, upd).compile().as_text()
+    full = 64 * 64 * 4
+    assert hlo.sized_copies(undonated, full)      # must materialize the buf
+    assert not hlo.sized_copies(donated, full)    # in-place via aliasing
+
+
+# ---------------------------------------------------------------------------
+# input_output_alias header parsing (analysis R1)
+
+
+def test_alias_pairs_parse_header():
+    hdr = ("HloModule m, is_scheduled=true, "
+           "input_output_alias={ {0}: (3, {}, may-alias), "
+           "{1, 0}: (4, {1}, must-alias) }, "
+           "entry_computation_layout={(f32[2,2])->f32[2,2]}")
+    assert hlo.input_output_alias_pairs(hdr) == [
+        hlo.AliasPair((0,), 3, (), "may-alias"),
+        hlo.AliasPair((1, 0), 4, (1,), "must-alias"),
+    ]
+    assert hlo.input_output_aliases(hdr) == 2
+
+
+def test_alias_pairs_absent_and_empty_index():
+    assert hlo.input_output_alias_pairs("HloModule m\n") == []
+    assert hlo.input_output_aliases("HloModule m\n") == 0
+    hdr = "HloModule m, input_output_alias={ {}: (0, {}, may-alias) }"
+    (p,) = hlo.input_output_alias_pairs(hdr)
+    assert p.output_index == () and p.param_number == 0
+
+
+def test_alias_pairs_real_donation():
+    x = jnp.zeros((16, 16))
+    f = jax.jit(lambda a, b: (a + 1.0, b * 2.0), donate_argnums=(1,))
+    pairs = hlo.input_output_alias_pairs(f.lower(x, x).compile().as_text())
+    assert any(p.param_number == 1 for p in pairs)
+
+
+# ---------------------------------------------------------------------------
+# collective_ops: async pairs once, dest bytes (analysis R2/R6)
+
+_COLL_HLO = """
+HloModule coll
+
+ENTRY %main (x: f32[8,128], y: f32[4,16]) -> f32[16,16] {
+  %x = f32[8,128]{1,0} parameter(0)
+  %y = f32[4,16]{1,0} parameter(1)
+  %ar = f32[8,128]{1,0} all-reduce(%x), replica_groups={}
+  %ags = (f32[4,16]{1,0}, f32[16,16]{1,0}) all-gather-start(%y), dimensions={0}
+  ROOT %agd = f32[16,16]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_collective_ops_bills_async_once_at_dest_size():
+    ops = hlo.collective_ops(_COLL_HLO)
+    assert [(k, nb) for k, nb, _ in ops] == [
+        ("all-reduce", 8 * 128 * 4),
+        ("all-gather", 16 * 16 * 4),   # gathered (unsharded) result
+    ]
+
+
+# ---------------------------------------------------------------------------
+# breakdown(): trip-count multipliers (hand-written nested while loops)
+
+_NESTED_WHILE_HLO = """
+HloModule trip
+
+%inner_cond (pc: (s32[], f32[8,8])) -> pred[] {
+  %pc = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%pc), index=0
+  %c5 = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c5), direction=LT
+}
+
+%inner_body (pb: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %pb = (s32[], f32[8,8]) parameter(0)
+  %i2 = s32[] get-tuple-element(%pb), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%pb), index=1
+  %y = f32[8,8]{1,0} add(%x, %x)
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i2, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ip, %y)
+}
+
+%outer_cond (qc: (s32[], f32[8,8])) -> pred[] {
+  %qc = (s32[], f32[8,8]) parameter(0)
+  %j = s32[] get-tuple-element(%qc), index=0
+  %c3 = s32[] constant(3)
+  ROOT %lt2 = pred[] compare(%j, %c3), direction=LT
+}
+
+%outer_body (qb: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %qb = (s32[], f32[8,8]) parameter(0)
+  %j2 = s32[] get-tuple-element(%qb), index=0
+  %z = f32[8,8]{1,0} get-tuple-element(%qb), index=1
+  %zero = s32[] constant(0)
+  %it = (s32[], f32[8,8]) tuple(%zero, %z)
+  %w = (s32[], f32[8,8]) while(%it), condition=%inner_cond, body=%inner_body
+  %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+  %one2 = s32[] constant(1)
+  %jp = s32[] add(%j2, %one2)
+  ROOT %t2 = (s32[], f32[8,8]) tuple(%jp, %r)
+}
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %i0 = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%i0, %p0)
+  %wo = (s32[], f32[8,8]) while(%t0), condition=%outer_cond, body=%outer_body
+  ROOT %res = f32[8,8]{1,0} get-tuple-element(%wo), index=1
+}
+"""
+
+
+def test_breakdown_nested_while_trip_multiplied():
+    top = {k: nb for k, nb, _ in hlo.breakdown(_NESTED_WHILE_HLO, top=50)}
+    # inner add: (result + 2 operands) * 8*8*4 B = 768, x (3 outer * 5 inner)
+    assert top["add@f32[8,8]"] == 768 * 3 * 5
+    # outer scalar add runs 3x, inner one 15x: (4+4+4) * (3 + 15)
+    assert top["add@s32[]"] == 12 * (3 + 15)
+
+
+def test_analyze_nested_while_bytes_trip_multiplied():
+    t = hlo.analyze(_NESTED_WHILE_HLO)
+    assert t.bytes >= 768 * 3 * 5
+
+
+def test_breakdown_scan_dot_trip_multiplied():
+    D, L, B = 64, 7, 4
+    w = jnp.zeros((L, D, D))
+    x = jnp.ones((B, D))
+
+    def f(x, w):
+        def body(c, wl):
+            return c @ wl, ()
+        return jax.lax.scan(body, x, w)[0]
+
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    dots = [nb for k, nb, _ in hlo.breakdown(txt, top=100)
+            if k.startswith("dot@")]
+    # the body dot bills at least its result each iteration, x L trips
+    assert dots and max(dots) >= L * B * D * 4
+
+
+# ---------------------------------------------------------------------------
+# breakdown(): fusion-wrapped dynamic-update-slice billed at window size
+
+_FUSED_DUS_HLO = """
+HloModule fused_dus
+
+%dus_body (fa: f32[16,64], fb: f32[1,64], fi: s32[]) -> f32[16,64] {
+  %fa = f32[16,64]{1,0} parameter(0)
+  %fb = f32[1,64]{1,0} parameter(1)
+  %fi = s32[] parameter(2)
+  ROOT %dus = f32[16,64]{1,0} dynamic-update-slice(%fa, %fb, %fi, %fi)
+}
+
+ENTRY %main (a: f32[16,64], b: f32[1,64], i: s32[]) -> f32[16,64] {
+  %a = f32[16,64]{1,0} parameter(0)
+  %b = f32[1,64]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %f = f32[16,64]{1,0} fusion(%a, %b, %i), kind=kLoop, calls=%dus_body
+}
+"""
+
+
+def test_breakdown_fusion_wrapped_dus_window_billed():
+    top = {k: nb for k, nb, _ in hlo.breakdown(_FUSED_DUS_HLO, top=10)}
+    full = 16 * 64 * 4
+    # in-place update: result+operands minus 2x the full buffer leaves the
+    # window read/write (256 B) + index (4 B), never the whole cache
+    assert top["fusion@f32[16,64]"] == (2 * full + 256 + 4) - 2 * full
+    # the fusion body itself is unreachable from ENTRY via calls/whiles and
+    # must not be double-billed
+    assert not any(k.startswith("dynamic-update-slice") for k in top)

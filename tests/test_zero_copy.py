@@ -4,15 +4,22 @@ The engine donates the cache operand of every jit
 (``EngineConfig.donate_buffers``) and the model updates the cache with
 ``dynamic_update_slice`` on a scan *carry* (transformer._scan_stack_with_cache),
 so the compiled decode program must alias the donated buffer in place.
-These tests pin that at the HLO level via launch/hlo.py: the donated decode
-step contains **no full-cache-sized copy op**, while the undonated baseline
-provably does (regression contrast — the detector is not vacuous).
+
+The HLO pins are expressed through analysis rule R1
+(``repro.analysis.donation.DonationAliasRule`` over
+``repro.analysis.programs.trace_program``), which is strictly stronger than
+the original inline checks: every cache leaf must alias BY flat parameter
+number (not just a surviving alias count), and the copy scan covers async
+``copy-start``/``copy-done`` pairs as well as plain copies.  The undonated
+baseline provably trips both checks (regression contrast — the detector is
+not vacuous), and the behavioral tests below prove donation at runtime.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.donation import DonationAliasRule
+from repro.analysis.programs import trace_program
 from repro.configs.base import get_config
 from repro.launch import hlo
 from repro.serving.engine import EngineConfig, ServingEngine
@@ -21,137 +28,33 @@ MOE_ARCH = "qwen3_moe_30b_a3b"
 DENSE_ARCH = "qwen3_0_6b"
 
 
-def compiled_decode(arch, donate, **cfg_kw):
-    """Compile the engine's decode jit; returns (hlo_text, cache leaves)."""
-    cfg = get_config(arch).reduced().replace(**cfg_kw)
-    eng = ServingEngine(cfg, EngineConfig(max_batch=2, prefill_len=8,
-                                          max_cache=32,
-                                          donate_buffers=donate))
-    sds = lambda t: jax.tree.map(
-        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
-    ivec = jax.ShapeDtypeStruct((2,), jnp.int32)
-    bvec = jax.ShapeDtypeStruct((2,), jnp.bool_)
-    fvec = jax.ShapeDtypeStruct((2,), jnp.float32)
-    step = jax.ShapeDtypeStruct((), jnp.int32)
-    txt = eng._jit_decode.lower(sds(eng.params), sds(eng.cache), ivec, ivec,
-                                bvec, fvec, ivec, step,
-                                False).compile().as_text()
-    return txt, jax.tree.leaves(eng.cache)
-
-
-def leaf_bytes(leaves):
-    return [int(np.prod(a.shape)) * a.dtype.itemsize for a in leaves]
-
-
-def compiled_unified(arch, donate, chunk_len=4, paged=False, page_size=8,
-                     **cfg_kw):
-    """Compile the engine's unified mixed-batch jit (ISSUE 3; ISSUE 4 with
-    ``paged=True``); returns (hlo_text, cache leaves)."""
-    cfg = get_config(arch).reduced().replace(**cfg_kw)
-    eng = ServingEngine(cfg, EngineConfig(max_batch=2, prefill_len=8,
-                                          max_cache=32, unified_step=True,
-                                          chunk_len=chunk_len,
-                                          donate_buffers=donate,
-                                          paged=paged, page_size=page_size))
-    sds = lambda t: jax.tree.map(
-        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
-    ivec = jax.ShapeDtypeStruct((2,), jnp.int32)
-    bvec = jax.ShapeDtypeStruct((2,), jnp.bool_)
-    fvec = jax.ShapeDtypeStruct((2,), jnp.float32)
-    toks = jax.ShapeDtypeStruct((2, chunk_len), jnp.int32)
-    step = jax.ShapeDtypeStruct((), jnp.int32)
-    bt = (jax.ShapeDtypeStruct((2, eng.max_blocks), jnp.int32)
-          if paged else None)
-    txt = eng._jit_unified.lower(
-        sds(eng.params), sds(eng.cache), toks, ivec, ivec, ivec, bt,
-        bvec, bvec, fvec, ivec, step, False).compile().as_text()
-    return txt, jax.tree.leaves(eng.cache)
-
-
-@pytest.mark.parametrize("arch,kw", [
+@pytest.mark.parametrize("variant,arch,kw", [
     # gather path off: its expert-weight gathers are larger than a cache
-    # leaf and would trip the size threshold without touching the cache
-    (MOE_ARCH, dict(gather_decode_max_tk=0)),
-    (DENSE_ARCH, dict()),
+    # leaf, so R1 applies the strict >=min-leaf copy threshold (see
+    # TracedProgram.copy_exact_sizes); production MoE configs keep the
+    # gather path on and R1 matches cache-leaf sizes exactly instead
+    ("decode", MOE_ARCH, dict(gather_decode_max_tk=0)),
+    ("decode", DENSE_ARCH, {}),
+    ("decode", MOE_ARCH, {}),
+    ("unified", MOE_ARCH, dict(gather_decode_max_tk=0)),
+    ("unified", DENSE_ARCH, {}),
+    ("unified", MOE_ARCH, {}),
+    ("paged", MOE_ARCH, dict(gather_decode_max_tk=0)),
+    ("paged", DENSE_ARCH, {}),
+    ("paged", MOE_ARCH, {}),
+    # quantized weight store (ISSUE 5): dequantization is converts and
+    # multiplies on weight-sized buffers, never a cache-leaf-sized copy
+    ("decode", MOE_ARCH, dict(weight_quant="int8")),
+    ("decode", MOE_ARCH, dict(weight_quant="int4")),
+    ("int8", MOE_ARCH, {}),
 ])
-def test_donated_decode_has_no_full_cache_copy(arch, kw):
-    txt, leaves = compiled_decode(arch, donate=True, **kw)
-    min_leaf = min(leaf_bytes(leaves))
-    copies = hlo.sized_copies(txt, min_leaf)
-    assert copies == [], copies
-    # every cache leaf must be aliased to its donated input
-    assert hlo.input_output_aliases(txt) >= len(leaves)
-
-
-def test_donated_decode_with_gather_path_never_copies_cache_leaf():
-    """Production MoE config (gather decode enabled): the only copies the
-    program may contain are the gather path's selected-expert weight loads
-    — never a buffer of a cache leaf's exact size."""
-    txt, leaves = compiled_decode(MOE_ARCH, donate=True)
-    sizes = set(leaf_bytes(leaves))
-    offending = [c for c in hlo.sized_copies(txt, min(sizes))
-                 if c[1] in sizes]
-    assert offending == [], offending
-    assert hlo.input_output_aliases(txt) >= len(leaves)
-
-
-@pytest.mark.parametrize("arch,kw", [
-    (MOE_ARCH, dict(gather_decode_max_tk=0)),
-    (DENSE_ARCH, dict()),
-])
-def test_donated_unified_step_has_no_full_cache_copy(arch, kw):
-    """ISSUE 3 satellite: the unified mixed-batch program keeps the
-    zero-copy property — its per-row block writes are dynamic-slice
-    read-modify-writes on the scan carry, so the donated cache still
-    aliases in place with no full-cache-sized copy."""
-    txt, leaves = compiled_unified(arch, donate=True, **kw)
-    min_leaf = min(leaf_bytes(leaves))
-    copies = hlo.sized_copies(txt, min_leaf)
-    assert copies == [], copies
-    assert hlo.input_output_aliases(txt) >= len(leaves)
-
-
-def test_donated_unified_step_production_config_never_copies_cache_leaf():
-    """Production MoE unified config (gather fast path may engage for tiny
-    blocks): no copy of a cache leaf's exact size, all leaves aliased."""
-    txt, leaves = compiled_unified(MOE_ARCH, donate=True)
-    sizes = set(leaf_bytes(leaves))
-    offending = [c for c in hlo.sized_copies(txt, min(sizes))
-                 if c[1] in sizes]
-    assert offending == [], offending
-    assert hlo.input_output_aliases(txt) >= len(leaves)
-
-
-@pytest.mark.parametrize("arch,kw", [
-    (MOE_ARCH, dict(gather_decode_max_tk=0)),
-    (DENSE_ARCH, dict()),
-])
-def test_donated_paged_step_has_no_pool_sized_copy(arch, kw):
-    """ISSUE 4 tentpole pin: the paged unified program writes K/V via an
-    in-place scatter on the scan-carry pool and reads it via block-table
-    gathers — the donated program must contain NO pool-sized copy op (the
-    gather's (B, NB*ps, Hkv, hd) result is a gather, not a copy, and is
-    bounded by the per-row logical cache, exactly what the contiguous
-    attention read)."""
-    txt, leaves = compiled_unified(arch, donate=True, paged=True,
-                                   page_size=8, **kw)
-    min_leaf = min(leaf_bytes(leaves))
-    copies = hlo.sized_copies(txt, min_leaf)
-    assert copies == [], copies
-    assert hlo.input_output_aliases(txt) >= len(leaves)
-
-
-def test_donated_paged_step_production_config_never_copies_cache_leaf():
-    """Production MoE paged config (gather fast path may engage): no copy
-    of a pool leaf's exact size, every leaf aliased to its donated
-    input."""
-    txt, leaves = compiled_unified(MOE_ARCH, donate=True, paged=True,
-                                   page_size=8)
-    sizes = set(leaf_bytes(leaves))
-    offending = [c for c in hlo.sized_copies(txt, min(sizes))
-                 if c[1] in sizes]
-    assert offending == [], offending
-    assert hlo.input_output_aliases(txt) >= len(leaves)
+def test_donated_program_is_zero_copy(variant, arch, kw):
+    prog = trace_program(variant, arch, cfg_kw=kw or None)
+    findings = DonationAliasRule().check(prog)
+    assert findings == [], [str(f) for f in findings]
+    # R1's alias check is per-leaf; keep the coarse count pin too so a
+    # rule regression can't silently weaken this test
+    assert hlo.input_output_aliases(prog.hlo_text) >= len(prog.cache_bytes)
 
 
 def test_paged_cow_page_copy_is_page_sized_not_pool_sized():
@@ -163,49 +66,28 @@ def test_paged_cow_page_copy_is_page_sized_not_pool_sized():
                                           page_size=8))
     sds = lambda t: jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
-    one = jax.ShapeDtypeStruct((1,), jnp.int32)
+    one = jax.ShapeDtypeStruct((1,), jax.numpy.int32)
     txt = eng._jit_copy_pages.lower(sds(eng.cache), one,
                                     one).compile().as_text()
     leaves = jax.tree.leaves(eng.cache)
-    min_leaf = min(leaf_bytes(leaves))
+    min_leaf = min(int(np.prod(a.shape)) * a.dtype.itemsize for a in leaves)
     assert hlo.sized_copies(txt, min_leaf) == []
 
 
-@pytest.mark.parametrize("level", ["int8", "int4"])
-def test_donated_decode_quantized_weights_never_copies_cache_leaf(level):
-    """ISSUE 5 acceptance: the donated decode program with the quantized
-    weight store keeps the PR-2 zero-copy invariant — on-the-fly weight
-    dequantization is converts/multiplies on weight-sized buffers, never
-    a copy of a cache leaf's size, and every cache leaf still aliases its
-    donated input."""
-    txt, leaves = compiled_decode(MOE_ARCH, donate=True, weight_quant=level)
-    sizes = set(leaf_bytes(leaves))
-    offending = [c for c in hlo.sized_copies(txt, min(sizes))
-                 if c[1] in sizes]
-    assert offending == [], offending
-    assert hlo.input_output_aliases(txt) >= len(leaves)
-
-
-def test_donated_unified_step_quantized_weights_never_copies_cache_leaf():
-    """Same pin for the unified mixed-batch program under int8 weights
-    (the production serving path of the quantized store)."""
-    txt, leaves = compiled_unified(MOE_ARCH, donate=True,
-                                   weight_quant="int8")
-    sizes = set(leaf_bytes(leaves))
-    offending = [c for c in hlo.sized_copies(txt, min(sizes))
-                 if c[1] in sizes]
-    assert offending == [], offending
-    assert hlo.input_output_aliases(txt) >= len(leaves)
-
-
-def test_undonated_decode_copies_the_cache():
+def test_undonated_decode_flags_every_leaf_and_the_cache_copy():
     """Regression contrast: without donation XLA MUST materialize the
-    non-aliased cache (the paper's C1 memory-management overhead) — proves
-    the copy detector actually detects."""
-    txt, leaves = compiled_decode(MOE_ARCH, donate=False,
-                                  gather_decode_max_tk=0)
-    assert hlo.input_output_aliases(txt) == 0
-    assert len(hlo.sized_copies(txt, min(leaf_bytes(leaves)))) >= 1
+    non-aliased cache (the paper's C1 memory-management overhead) — R1
+    names every unaliased leaf AND finds the full-cache-sized copy, which
+    proves both halves of the detector actually detect."""
+    prog = trace_program("decode", MOE_ARCH, donate=False,
+                         cfg_kw=dict(gather_decode_max_tk=0),
+                         name="decode-undonated")
+    findings = DonationAliasRule().check(prog)
+    missing = [f for f in findings if "leaf" in f.detail]
+    copies = [f for f in findings if "line" in f.detail]
+    assert len(missing) == len(prog.cache_bytes)
+    assert copies, "undonated baseline must contain a cache-sized copy"
+    assert hlo.input_output_aliases(prog.hlo_text) == 0
 
 
 def test_donation_deletes_the_dispatched_cache_buffer():
