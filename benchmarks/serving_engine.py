@@ -244,6 +244,76 @@ def run_shared_prefix(cfg, *, requests, new_tokens, prompt_len, max_batch,
     return out
 
 
+def run_preempt_ab(cfg, *, requests, new_tokens, prompt_len, max_batch,
+                   chunk_len, page_size, seed=0):
+    """Overcommit A/B (PR 7 acceptance): the paged engine at equal pool
+    bytes with conservative lifetime admission vs overcommitted lazy
+    admission + priority preemption.  The pool is sized to hold roughly
+    half the concurrent lifetimes, so the conservative engine serializes
+    admissions while the overcommitted one packs rows and preempts under
+    growth pressure.  Reports admitted concurrency (``active_hwm``), TTFT
+    p50/p95 (sync stepping — the honest stamp), and preempt/restore
+    counts; gated on token equality A == B per request (greedy preemption
+    + prefix-cache restore is invisible in the token stream).
+
+    Capacity is forced non-binding inside this round: with a binding
+    ``capacity_factor`` the per-iteration dispatch pool depends on WHICH
+    rows are co-scheduled, so changing the admission schedule changes
+    tokens for reasons unrelated to preemption (the same batch-capacity
+    semantics that exempt ``legacy`` from token gates outside
+    ``--equal-capacity``).  The preemption gate must isolate the
+    preempt/restore machinery, so it runs in the no-drop regime."""
+    from repro.serving.scheduler import lifetime_pages
+    cfg = cfg.replace(capacity_factor=max(cfg.capacity_factor, 8.0))
+    pool = max_batch * lifetime_pages(prompt_len, new_tokens,
+                                      page_size) // 2
+    kw = dict(batched_prefill=True, async_steps=False, donate_buffers=True,
+              unified_step=True, paged=True)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len)
+               for _ in range(requests)]
+    out = {}
+    for name, overcommit in (("conservative", False), ("overcommit", True)):
+        eng = ServingEngine(cfg, EngineConfig(
+            max_batch=max_batch, prefill_len=prompt_len,
+            max_cache=prompt_len + new_tokens + 8, chunk_len=chunk_len,
+            page_size=page_size, num_pages=pool, overcommit=overcommit,
+            **kw), rng=jax.random.PRNGKey(0))
+        eng.submit(prompts[0], max_new_tokens=2)       # compile warmup
+        eng.run_until_done()
+        eng.prefix.clear()
+        for k in eng.stats:
+            eng.stats[k] = type(eng.stats[k])()
+        t0 = time.perf_counter()
+        for p in prompts:
+            eng.submit(p, max_new_tokens=new_tokens)
+        done = eng.run_until_done()
+        wall = time.perf_counter() - t0
+        tt = eng.ttft(since=t0)
+        rs = eng.resilience_stats()
+        out[name] = {
+            "wall_s": wall,
+            "tok_per_s_wall": requests * (prompt_len + new_tokens) / wall,
+            "ttft_p50_ms": tt["p50"] * 1e3,
+            "ttft_p95_ms": tt["p95"] * 1e3,
+            "active_hwm": rs["active_hwm"],
+            "preemptions": rs["preemptions"],
+            "restores": rs["restores"],
+            "num_pages": pool,
+            "generated": {r.uid: list(r.generated) for r in done},
+        }
+    # gate: preemption + restore never changes greedy tokens
+    assert (out["overcommit"].pop("generated")
+            == out["conservative"].pop("generated")), \
+        "overcommit preempt/restore diverged from conservative admission"
+    # gate: equal pool bytes, strictly more admitted concurrency
+    assert (out["overcommit"]["active_hwm"]
+            > out["conservative"]["active_hwm"]), \
+        ("overcommit admitted no extra concurrency",
+         out["overcommit"], out["conservative"])
+    return out
+
+
 def run_quant_ab(base_cfg, *, requests, new_tokens, prompt_len, max_batch,
                  chunk_len, repeat=1, seed=0):
     """Quantized weight store A/B (PR 5 acceptance): the unified engine at
@@ -348,6 +418,10 @@ def main():
     ap.add_argument("--skip-quant", action="store_true",
                     help="skip the quantized-weight-store A/B round "
                          "(fp vs int8 tok/s + weight bytes, PR 5 gates)")
+    ap.add_argument("--skip-preempt", action="store_true",
+                    help="skip the overcommit preemption A/B round "
+                         "(conservative vs overcommitted admission at "
+                         "equal pool bytes, PR 7 gates)")
     args = ap.parse_args()
     if args.shared_prefix_len >= args.prompt_len:
         ap.error("--shared-prefix-len must be < --prompt-len")
@@ -519,6 +593,27 @@ def main():
               f"{quant_ab['raw_fp_token_agreement']:.1%}  "
               f"(int8 == fake-quant reference: gated exact)")
         results["quant_ab"] = quant_ab
+    # overcommit preemption A/B (PR 7): conservative lifetime admission vs
+    # lazy overcommit + priority preemption at EQUAL pool bytes — token
+    # equality and strictly-higher admitted concurrency gated inside
+    preempt_ab = {}
+    if not args.skip_preempt:
+        preempt_ab = run_preempt_ab(
+            base_cfg, requests=args.requests, new_tokens=args.new_tokens,
+            prompt_len=args.prompt_len, max_batch=args.max_batch,
+            chunk_len=args.chunk_len, page_size=args.page_size)
+        print(f"\novercommit preemption (equal pool: "
+              f"{preempt_ab['overcommit']['num_pages']} pages, sync "
+              "stepping):")
+        print(markdown_table(
+            ["admission", "wall s", "tok/s", "TTFT p50 ms", "TTFT p95 ms",
+             "active hwm", "preempts", "restores"],
+            [[nm, f"{r['wall_s']:.2f}", f"{r['tok_per_s_wall']:.1f}",
+              f"{r['ttft_p50_ms']:.1f}", f"{r['ttft_p95_ms']:.1f}",
+              str(r["active_hwm"]), str(r["preemptions"]),
+              str(r["restores"])]
+             for nm, r in preempt_ab.items()]))
+        results["preempt_ab"] = preempt_ab
     path = save_result("serving_engine", results)
     print(f"saved {path}")
 
@@ -558,6 +653,8 @@ def main():
             "raw_fp_token_agreement": quant_ab["raw_fp_token_agreement"],
             "weight_quant_block": base_cfg.weight_quant_block,
         }
+    if preempt_ab:
+        bench["preempt_ab"] = preempt_ab
     if args.note:
         bench["note"] = args.note
     with open(BENCH_JSON, "w") as f:

@@ -21,7 +21,13 @@ assigned from a ``self._jit_*`` call — and flags
   * ``.block_until_ready()`` not guarded by an ``async_steps`` check
     (the documented opt-in sync point).
 
-``_harvest`` is the allowed boundary and is not scanned.
+``_harvest`` is the allowed boundary and is not scanned.  PR7 adds a
+second documented boundary: ``_quarantine_check`` — the NaN-guard's
+per-step finiteness readback (``EngineConfig.nan_guard``), an explicit
+opt-in sync exactly like ``async_steps=False`` — and extends the scanned
+set with the scheduler's preempt/restore/cancel/growth methods, which
+must stay pure host bookkeeping (they run inside the admission path of
+every iteration).
 """
 from __future__ import annotations
 
@@ -33,7 +39,11 @@ from repro.analysis.framework import Rule
 
 HOT_METHODS = ("step", "_step_unified", "_admit", "_admit_batched",
                "_admit_sequential", "_admit_paged", "_post_admit",
-               "_release_slot", "_prefix_insert", "_next_step_idx")
+               "_release_slot", "_prefix_insert", "_next_step_idx",
+               # PR7 resilience layer: scheduling decisions are host-only
+               "_ensure_decode_page", "_preempt_slot", "_running_rows",
+               "_covered", "preempt", "cancel", "_terminate_slot",
+               "_finish_slot", "_sweep_deadlines", "_quarantine")
 DEVICE_ATTRS = ("last_tok", "cache", "_sample_key")
 _FORCING_BUILTINS = ("int", "float", "bool")
 

@@ -165,11 +165,13 @@ def trace_program(variant: str, arch: str = DEFAULT_ARCH, *,
         toks = jnp.zeros((b, eng.chunk_len), jnp.int32)
         bt = (jnp.zeros((b, eng.max_blocks), jnp.int32)
               if eng.paged else None)
+        # fvec after topks is the fault-injection poison vector (all-zero
+        # = finite = no injection; serving/faults.py)
         args = (eng.params, eng.cache, toks, ivec, ivec, ivec, bt,
-                bvec, bvec, fvec, ivec, step)
+                bvec, bvec, fvec, ivec, fvec, step)
         lowered = eng._jit_unified.lower(*args, False)
         jaxpr_thunk = lambda: jax.make_jaxpr(
-            eng._unified, static_argnums=(12,))(*args, False)
+            eng._unified, static_argnums=(13,))(*args, False)
     txt = lowered.compile().as_text()
 
     cache_flat = jax.tree_util.tree_flatten_with_path(eng.cache)[0]

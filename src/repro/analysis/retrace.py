@@ -20,6 +20,15 @@ body; the documented steady-state budget per engine mode:
 decode transitions (the transitions that historically retraced); the rule
 then compares counts against the budget.  Budgets are upper bounds — a
 workload that never hits pure decode traces less, which is fine.
+
+PR7 extends the driven transitions, NOT the budgets: preemption (a
+running row evicted to the prefix tree and restored through admission),
+restore's partial-tail re-prefill, and NaN-quarantine retry all must
+ride the already-compiled programs — restore re-prefills through the
+same chunk_len-wide block, the tail copy-on-write reuses the budgeted
+``copy_pages`` trace, and a quarantined row's re-dispatch is the
+identical shape it failed at.  A scheduler change that sneaks a new
+shape into any of those paths now fails R3.
 """
 from __future__ import annotations
 
@@ -29,7 +38,9 @@ from repro.analysis.framework import Rule
 
 
 def expected_trace_budget(eng) -> dict:
-    """Max traces per jit body for this engine's configuration."""
+    """Max traces per jit body for this engine's configuration.
+    Preempt/restore/quarantine transitions are deliberately NOT budget
+    lines: they must reuse the steady-state programs."""
     if getattr(eng, "unified", False):
         budget = {"unified": 2 if eng.chunk_len > 1 else 1}
         if getattr(eng, "paged", False):
@@ -45,13 +56,46 @@ def expected_trace_budget(eng) -> dict:
 def drive_engine(eng, *, rounds: int = 2, prompt_len: int = 6,
                  new_tokens: int = 4, seed: int = 0) -> None:
     """Admission -> chunked prefill -> mixed -> pure-decode transitions,
-    twice over, so any shape-dependent retrace has every chance to fire."""
+    twice over, so any shape-dependent retrace has every chance to fire.
+    On paged engines, also push a mid-decode preempt + prefix restore; on
+    unified engines, a NaN-quarantine retry — both must stay inside the
+    steady-state budget (no lines are added for them)."""
     rng = np.random.default_rng(seed)
     for _ in range(rounds):
         for _ in range(eng.ecfg.max_batch):
             eng.submit(rng.integers(0, 50, prompt_len),
                        max_new_tokens=new_tokens)
         eng.run_until_done()
+    if getattr(eng, "paged", False):
+        # preempt a decoding row, then restore through the prefix cache:
+        # the block-table remap + one-token tail re-prefill must reuse the
+        # chunk_len-wide block and the budgeted copy_pages CoW trace.
+        uid = eng.submit(rng.integers(0, 50, prompt_len),
+                         max_new_tokens=new_tokens + 2)
+        req = eng._all[uid]
+        for _ in range(64):
+            eng.step()
+            slot = next((i for i, r in enumerate(eng.slots) if r is req),
+                        None)
+            if (slot is not None
+                    and eng.prefill_pos[slot] >= len(eng.slot_ctx[slot])):
+                break
+        eng.preempt(uid)
+        eng.run_until_done()
+    if getattr(eng, "unified", False) and eng.faults is None:
+        # quarantine retry: poison one step's logits; the retried dispatch
+        # is the identical shape it failed at — zero extra traces.
+        from repro.serving.faults import Fault, FaultPlan
+        guard_was = eng._guard
+        eng.faults = FaultPlan([Fault(eng._iter + 2, "nan")])
+        eng._guard = True
+        try:
+            eng.submit(rng.integers(0, 50, prompt_len),
+                       max_new_tokens=new_tokens)
+            eng.run_until_done()
+        finally:
+            eng.faults = None
+            eng._guard = guard_was
 
 
 class RetraceRule(Rule):

@@ -37,7 +37,9 @@ def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
                token_budget: int = 0, temperature: float = 0.0,
                top_k: int = 0, paged: bool = False, page_size: int = 16,
                num_pages: int = 0, shared_prefix: int = 0,
-               weight_quant: str | None = None, fit_cfg=None):
+               weight_quant: str | None = None, fit_cfg=None,
+               priorities=None, deadline_ms: float | None = None,
+               overcommit: bool = False):
     if weight_quant is not None:
         cfg = cfg.replace(weight_quant=weight_quant)
     fit_cfg = fit_cfg or cfg
@@ -47,15 +49,18 @@ def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
         batched_prefill=not legacy, async_steps=not legacy,
         unified_step=unified and not legacy, chunk_len=chunk_len,
         token_budget=token_budget, paged=paged, page_size=page_size,
-        num_pages=num_pages))
+        num_pages=num_pages, overcommit=overcommit))
     rng = np.random.default_rng(seed)
     sysp = rng.integers(0, cfg.vocab_size, shared_prefix)
-    for _ in range(requests):
+    for k in range(requests):
         plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
         plen = max(plen, min(shared_prefix + 1, prompt_len))
         tail = rng.integers(0, cfg.vocab_size, max(plen - shared_prefix, 1))
         eng.submit(np.concatenate([sysp, tail])[:prompt_len], new_tokens,
-                   temperature=temperature, top_k=top_k)
+                   temperature=temperature, top_k=top_k,
+                   priority=(priorities[k % len(priorities)]
+                             if priorities else 0),
+                   deadline_ms=deadline_ms)
     done = eng.run_until_done()
     tp = eng.throughput()
     mode = ("legacy (seq prefill, sync)" if legacy
@@ -89,6 +94,15 @@ def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
               f"{ps['prefix_cached_pages']} pages cached, "
               f"{ps['prefix_evictions']} evictions, "
               f"{ps['cow_copies']} CoW copies")
+    rs = eng.resilience_stats()
+    n_done = sum(1 for r in done if r.status == "done")
+    if any(rs.values()) or n_done != len(done):
+        print(f"resilience             : {n_done}/{len(done)} done, "
+              f"{rs['expired']} expired, {rs['cancelled']} cancelled, "
+              f"{rs['failed']} failed; {rs['preemptions']} preemptions / "
+              f"{rs['restores']} restores "
+              f"({rs['restore_hit_tokens']} tokens restored from prefix "
+              f"cache), admitted high-water {rs['active_hwm']}")
     if cfg.is_moe:
         for n in (2, 3, 4):
             e = eng.expected_experts_per_node(n)
@@ -147,6 +161,20 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt shared by every request "
                          "(exercises the prefix cache in --paged mode)")
+    ap.add_argument("--priority", type=int, nargs="+", default=None,
+                    help="admission priorities, cycled across requests "
+                         "(e.g. --priority 0 5: every other request is "
+                         "high-priority; higher admits first and, with "
+                         "--overcommit, may preempt lower)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request wall-clock deadline from submit; "
+                         "unfinished requests expire and release pages")
+    ap.add_argument("--overcommit", action="store_true",
+                    help="paged mode: admit on current context instead of "
+                         "reserving the full lifetime; under pool pressure "
+                         "the scheduler preempts low-priority rows into "
+                         "the prefix cache and restores them later "
+                         "(docs/DESIGN.md §10)")
     ap.add_argument("--weight-quant", choices=["none", "int8", "int4"],
                     default=None,
                     help="blockwise quantized weight store "
@@ -154,6 +182,9 @@ def main():
                          "packed-int4 QuantTensor leaves with per-block "
                          "fp32 scales; router and embedding stay fp")
     args = ap.parse_args()
+    if args.overcommit and not args.paged:
+        ap.error("--overcommit requires --paged (it is a page-pool "
+                 "admission policy)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -166,7 +197,8 @@ def main():
                paged=args.paged, page_size=args.page_size,
                num_pages=args.num_pages, shared_prefix=args.shared_prefix,
                weight_quant=args.weight_quant,
-               fit_cfg=get_config(args.arch))
+               fit_cfg=get_config(args.arch), priorities=args.priority,
+               deadline_ms=args.deadline_ms, overcommit=args.overcommit)
 
 
 if __name__ == "__main__":

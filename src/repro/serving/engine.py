@@ -119,9 +119,16 @@ import numpy as np
 from repro.core import quant
 from repro.core.dynamic_load import LRUExpertTracker
 from repro.models.model import build_model
+from repro.serving import scheduler as sched
+from repro.serving.faults import InjectedFault
 from repro.serving.paging import PageAllocator, PrefixCache
 
 Array = jax.Array
+
+# Terminal request states: a request in one of these never transitions
+# again (cancel() on it is a no-op returning False) and its pages are
+# already released.
+TERMINAL_STATES = ("done", "cancelled", "expired", "failed")
 
 
 @dataclasses.dataclass
@@ -132,11 +139,27 @@ class Request:
     # per-request sampling params (greedy when temperature == 0)
     temperature: float = 0.0
     top_k: int = 0                # 0 = no top-k cut (full vocab)
+    # scheduling class (docs/DESIGN.md §10): higher admits first; ties
+    # admit FIFO.  deadline_s is an absolute time.perf_counter() stamp
+    # past which the request is expired instead of served.
+    priority: int = 0
+    deadline_s: float | None = None
     # filled by the engine
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
     submit_s: float = 0.0         # wall clock at submit()
     first_token_s: float | None = None  # wall clock when token 1 harvested
+    # scheduler state (docs/DESIGN.md §10): queued -> running <->
+    # preempted -> done | cancelled | expired | failed
+    status: str = "queued"
+    seq: int = 0                  # submission order; kept across preemption
+    preemptions: int = 0          # times this request lost its slot
+    last_preempt_epoch: int = 0   # engine epoch of the last preemption
+    # virtual prompt at re-admission: original prompt + every token
+    # generated before the preemption (its cache pages live in the
+    # prefix tree, so restore re-prefills at most one partial chunk)
+    resume_tokens: np.ndarray | None = None
+    nan_retries: int = 0          # consecutive quarantined steps
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,6 +208,28 @@ class EngineConfig:
     # page_size) — the same token capacity as the contiguous layout, so
     # paged-vs-contiguous A/Bs run at equal pool bytes).
     num_pages: int = 0
+    # Overcommit the page pool (docs/DESIGN.md §10; requires paged):
+    # admission allocates only the pages the CONTEXT needs (lazy decode
+    # growth takes one page at a time as rows advance) instead of the
+    # whole ceil((prompt + max_new - 1) / page_size) lifetime, so more
+    # requests run concurrently at equal pool bytes.  When growth or a
+    # higher-priority admission finds the pool short, a low-priority
+    # row is PREEMPTED: its pages move into the prefix tree, the
+    # request is requeued, and restore is a block-table remap plus at
+    # most one partial-tail re-prefill chunk — greedy token streams are
+    # identical to the unpreempted run (tests/test_resilience.py).
+    # False keeps PR4's conservative whole-lifetime admission: an
+    # admitted request can never hit pool OOM mid-generation.
+    overcommit: bool = False
+    # NaN/Inf logit quarantine (serving/faults.py): when on, every
+    # unified step reads back the jit's per-row finiteness flag
+    # (_quarantine_check — a deliberate per-step device sync, the same
+    # opt-in trade as async_steps=False) and withholds the host-state
+    # advance of any non-finite row so it retries from its last durable
+    # cache state.  None = auto: enabled iff a fault plan is installed.
+    nan_guard: bool | None = None
+    # consecutive non-finite steps before a quarantined row is failed
+    nan_retry_limit: int = 3
     # Donate the cache operand of every jit in the hot loop (the JAX
     # analogue of the paper's C1 pre-allocated buffers): the model updates
     # the cache with dynamic_update_slice on a scan *carry*
@@ -224,7 +269,7 @@ class ServingEngine:
     """Continuous-batching engine over the pure-functional Model API."""
 
     def __init__(self, cfg_model, engine_cfg: EngineConfig | None = None,
-                 params=None, rng=None, mesh=None):
+                 params=None, rng=None, mesh=None, fault_plan=None):
         self.cfg = cfg_model
         self.ecfg = engine_cfg or EngineConfig()
         self.mesh = mesh
@@ -248,14 +293,37 @@ class ServingEngine:
                                          cfg_model.num_experts)
                         if cfg_model.is_moe and self.ecfg.track_experts
                         else None)
-        self.queue: collections.deque[Request] = collections.deque()
+        self.queue = sched.AdmissionQueue()
         self.slots: list[Request | None] = [None] * self.ecfg.max_batch
+        # per-slot admission context: the token sequence the occupant is
+        # prefilling against — req.prompt on first admission, the longer
+        # resume_tokens (prompt + pre-preemption generation) on restore
+        self.slot_ctx: list[np.ndarray | None] = [None] * self.ecfg.max_batch
         self._all: dict[int, Request] = {}
         self._uid = 0
+        self._seq = 0                 # submission sequence for FIFO ties
+        self._iter = 0                # step() count; fault-plan step key
+        self._has_deadlines = False   # skip the sweep until one exists
+        self._preempt_epoch = 0       # bumps per preemption (fairness key)
+        self.preempt_log: list = []   # (iter, uid, running-snapshot) tuples
+        self.faults = fault_plan
+        if fault_plan is not None and not (self.ecfg.unified_step):
+            raise ValueError("fault injection requires the unified engine "
+                             "path (unified_step=True)")
+        self._guard = (self.ecfg.nan_guard if self.ecfg.nan_guard is not None
+                       else fault_plan is not None)
+        if self.ecfg.overcommit and not self.ecfg.paged:
+            raise ValueError("overcommit requires the paged KV cache "
+                             "(EngineConfig.paged=True)")
         b, c = self.ecfg.max_batch, self.ecfg.max_cache
         self.lengths = np.zeros((b,), np.int32)
         self.budgets = np.zeros((b,), np.int32)
         self.last_tok = jnp.zeros((b,), jnp.int32)
+        # resilience scratch: the all-clear poison vector (finite = no
+        # injection) and the no-guard quarantine answer, built once so
+        # the fault-free hot loop allocates nothing per step
+        self._poison0 = np.zeros((b,), np.float32)
+        self._no_bad = np.zeros((b,), bool)
         self._pending: list[_Pending] = []
         # unified-step scheduler state: per-slot prefill progress (prompt
         # tokens already streamed into the cache) and sampling params
@@ -336,7 +404,7 @@ class ServingEngine:
         self._jit_decode = jax.jit(self._decode, donate_argnums=donate,
                                    static_argnums=(8,))
         self._jit_unified = jax.jit(self._unified, donate_argnums=donate,
-                                    static_argnums=(12,))
+                                    static_argnums=(13,))
         self._sampling = False
         self.stats = {"prefill_tokens": 0, "prefill_pad_tokens": 0,
                       "decode_steps": 0, "decode_tokens": 0,
@@ -350,7 +418,13 @@ class ServingEngine:
                       # paged-mode counters (0 when paged=False)
                       "prefix_lookups": 0, "prefix_hits": 0,
                       "prefix_hit_tokens": 0, "cow_copies": 0,
-                      "pages_hwm": 0}
+                      "pages_hwm": 0,
+                      # resilience counters (docs/DESIGN.md §10)
+                      "preemptions": 0, "restores": 0,
+                      "restore_hit_tokens": 0, "cancelled": 0,
+                      "expired": 0, "failed": 0,
+                      "alloc_stalls": 0, "dispatch_failures": 0,
+                      "nan_quarantines": 0, "active_hwm": 0}
 
     # -- jit bodies ---------------------------------------------------------
 
@@ -389,7 +463,7 @@ class ServingEngine:
 
     def _unified(self, params, cache, tokens, last_tok, lengths, seg_lens,
                  block_tables, is_decode, sample_mask, temps, topks,
-                 step_idx, sampling):
+                 poison, step_idx, sampling):
         """ONE jit program for prefill chunks, decode rows, and any mix.
 
         tokens: (B, chunk_len) host-scheduled block — decode rows take their
@@ -400,8 +474,18 @@ class ServingEngine:
         generated token (decode rows and final prefill chunks — mid-prompt
         chunks keep ``last_tok`` untouched).  ``block_tables`` is None on
         the contiguous cache and the (B, max_blocks) page map on the paged
-        pool (an undonated host snapshot, like ``lengths``).  Returns
-        (last_tok', cache', routing (L, B*chunk_len, K))."""
+        pool (an undonated host snapshot, like ``lengths``).
+
+        ``poison`` is the fault-injection vector (serving/faults.py): a
+        (B,) fp32 whose non-finite entries overwrite that row's logits
+        (finite entries — the steady state — inject nothing; the vector is
+        a runtime value, so injection never retraces).  The step always
+        returns a per-row ``bad`` finiteness flag and refuses to let a
+        non-finite row overwrite ``last_tok`` — the device half of the
+        NaN quarantine, active whether or not the host guard reads it.
+
+        Returns (last_tok', cache', routing (L, B*chunk_len, K),
+        bad (B,) bool)."""
         self.trace_counts["unified"] += 1
         tok0 = jnp.where(is_decode, last_tok, tokens[:, 0])
         tokens = jnp.concatenate([tok0[:, None], tokens[:, 1:]], axis=1)
@@ -415,9 +499,13 @@ class ServingEngine:
             params, {"tokens": tokens, "lengths": lengths,
                      "seg_lens": seg_lens, "block_tables": block_tables},
             cache, self.mesh, context_len=self.ecfg.max_cache)
+        logits = jnp.where(jnp.isfinite(poison)[:, None], logits,
+                           poison[:, None].astype(logits.dtype))
+        bad = ~jnp.all(jnp.isfinite(
+            logits[:, :self.cfg.vocab_size].astype(jnp.float32)), axis=-1)
         nxt = self._sample_next(logits, temps, topks, step_idx, sampling)
-        last_tok = jnp.where(sample_mask, nxt, last_tok)
-        return last_tok, cache, routing
+        last_tok = jnp.where(sample_mask & ~bad, nxt, last_tok)
+        return last_tok, cache, routing, bad
 
     def _copy_pages(self, cache, src, dst):
         """Device half of copy-on-write (serving/paging): duplicate pool
@@ -497,9 +585,16 @@ class ServingEngine:
     # -- public API ---------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
-               temperature: float = 0.0, top_k: int = 0) -> int:
+               temperature: float = 0.0, top_k: int = 0,
+               priority: int = 0, deadline_ms: float | None = None) -> int:
         """Queue a request.  ``temperature``/``top_k`` select per-request
         sampling inside the jit step (greedy when temperature=0).
+
+        ``priority`` orders admission (higher first, FIFO within a class;
+        under ``EngineConfig.overcommit`` a higher-priority arrival may
+        preempt strictly-lower-priority running rows).  ``deadline_ms``
+        is a wall-clock budget from submit: a request still unfinished
+        when it elapses is expired and its pages released.
 
         Prompt-length contract: the unified engine streams prompts through
         the cache in chunks, so anything up to ``max_cache`` is served
@@ -542,11 +637,17 @@ class ServingEngine:
                     f"{self.num_pages}; raise num_pages or lower "
                     f"max_new_tokens")
         self._uid += 1
+        self._seq += 1
         if temperature > 0:
             self._sampling = True    # one-time retrace with the sampler
+        now = time.perf_counter()
         req = Request(self._uid, prompt, max_new_tokens,
                       temperature=float(temperature), top_k=int(top_k),
-                      submit_s=time.perf_counter())
+                      priority=int(priority), submit_s=now, seq=self._seq,
+                      deadline_s=(now + deadline_ms / 1e3
+                                  if deadline_ms is not None else None))
+        if req.deadline_s is not None:
+            self._has_deadlines = True
         self.queue.append(req)
         self._all[req.uid] = req
         return self._uid
@@ -573,6 +674,8 @@ class ServingEngine:
     def _post_admit(self, rows, routing, routing_batch: int) -> None:
         for _, slot, req in rows:
             self.slots[slot] = req
+            self.slot_ctx[slot] = req.prompt
+            req.status = "running"
             self.lengths[slot] = self.ecfg.prefill_len
             self.budgets[slot] = req.max_new_tokens - 1
             # real prompt tokens vs the padding the fixed-length program
@@ -659,6 +762,8 @@ class ServingEngine:
         In async mode the device step is only *dispatched* here; tokens are
         appended to requests at the next harvest boundary (a request
         finishing, ``flush()``, or sync mode)."""
+        self._iter += 1
+        self._sweep_deadlines()
         if self.unified:
             return self._step_unified()
         self._admit()
@@ -697,7 +802,7 @@ class ServingEngine:
             if self.budgets[i] <= 0:
                 # budget-based completion is host-known at dispatch time:
                 # free the slot now, collect the tokens at the harvest below
-                self._release_slot(i)
+                self._finish_slot(i)
                 finishing = True
         if finishing or not self.ecfg.async_steps:
             self._harvest()
@@ -716,23 +821,52 @@ class ServingEngine:
         ``token_budget`` (0 = unlimited) is exhausted.  A row whose chunk
         completes its prompt samples its first generated token from that
         chunk's last logit — the prefill→decode transition costs no extra
-        program."""
+        program.
+
+        Resilience hooks (docs/DESIGN.md §10): paged decode rows secure
+        the page their next token writes BEFORE anything is scheduled
+        (lazy growth under overcommit — a row that cannot get one either
+        idles for the iteration or preempts a peer); an injected
+        dispatch fault aborts the iteration before any host bookkeeping
+        mutates, so the identical iteration re-dispatches next step; and
+        with the NaN guard on, rows whose logits came back non-finite
+        are withheld from every host-state advance (lengths /
+        prefill_pos / budgets / token record) and retried from their
+        last durable cache state — the re-dispatched block writes are
+        idempotent, so neighbours never see the fault."""
         b, t = self.ecfg.max_batch, self.chunk_len
         for i in range(b):
             if self.slots[i] is None and self.queue:
                 if self.paged:
-                    # page-gated admission: FIFO, stop at the first
-                    # request the pool cannot hold (never skip ahead)
+                    # page-gated admission: priority order, stop at the
+                    # first request the pool cannot hold (never skip
+                    # ahead within the queue)
                     if not self._admit_paged(i):
                         break
                     continue
                 req = self.queue.popleft()
                 self.slots[i] = req
+                self.slot_ctx[i] = req.prompt
+                req.status = "running"
                 self.lengths[i] = 0
                 self.prefill_pos[i] = 0
                 self.budgets[i] = req.max_new_tokens
                 self.temps[i] = req.temperature
                 self.topks[i] = req.top_k
+        self.stats["active_hwm"] = max(
+            self.stats["active_hwm"],
+            sum(1 for s in self.slots if s is not None))
+        if self.paged:
+            # lazy-growth pass: every decode-phase row secures the page
+            # its next token writes BEFORE any row enters this
+            # iteration's dispatch — growth may preempt a peer (or the
+            # grower itself), and a preempted row must never already be
+            # scheduled when its pages are released
+            for i in range(b):
+                req = self.slots[i]
+                if (req is not None
+                        and self.prefill_pos[i] >= len(self.slot_ctx[i])):
+                    self._ensure_decode_page(i)
         tokens = np.zeros((b, t), np.int32)
         seg = np.zeros((b,), np.int32)
         is_dec = np.zeros((b,), bool)
@@ -740,22 +874,28 @@ class ServingEngine:
         budget = self.ecfg.token_budget or (b * t + b)   # 0 = unlimited
         decode_rows, prefill_rows = [], []
         for i, req in enumerate(self.slots):
-            if req is not None and self.prefill_pos[i] >= len(req.prompt):
+            if req is not None and self.prefill_pos[i] >= len(self.slot_ctx[i]):
+                if self.paged and not self._covered(i):
+                    # page-starved (alloc fault / exhausted pool with no
+                    # victim): the row idles this iteration with all its
+                    # state intact and retries next step
+                    continue
                 seg[i] = 1
                 is_dec[i] = sample[i] = True
                 decode_rows.append(i)   # budget-exempt: decode never starves
         for i, req in enumerate(self.slots):
             if req is None or is_dec[i] or budget <= 0:
                 continue
+            ctx = self.slot_ctx[i]
             pos = int(self.prefill_pos[i])
-            n = min(t, len(req.prompt) - pos, budget,
+            n = min(t, len(ctx) - pos, budget,
                     self.ecfg.max_cache - int(self.lengths[i]))
             if n <= 0:
                 continue
-            tokens[i, :n] = req.prompt[pos:pos + n]
+            tokens[i, :n] = ctx[pos:pos + n]
             seg[i] = n
             budget -= n
-            sample[i] = pos + n == len(req.prompt)
+            sample[i] = pos + n == len(ctx)
             prefill_rows.append(i)
         if not decode_rows and not prefill_rows:
             return 0
@@ -765,17 +905,35 @@ class ServingEngine:
         # decode step — never chunk_len columns of dead compute
         if not prefill_rows:
             tokens = tokens[:, :1]
+        poison = self._poison0
+        if self.faults is not None:
+            f = self.faults.poll(self._iter, "nan")
+            if f is not None:
+                poison = poison.copy()
+                poison[list(f.rows) if f.rows else range(b)] = f.value
         t0 = time.perf_counter()
-        step_idx = self._next_step_idx()
         # lengths/temps/topks/block-table snapshots: same deferred-transfer
         # race rule as the reference decode path (see step())
         bt = (jnp.asarray(self.block_tables.copy()) if self.paged else None)
-        self.last_tok, self.cache, routing = self._jit_unified(
-            self.params, self.cache, jnp.asarray(tokens), self.last_tok,
-            jnp.asarray(self.lengths.copy()), jnp.asarray(seg), bt,
-            jnp.asarray(is_dec), jnp.asarray(sample),
-            jnp.asarray(self.temps.copy()), jnp.asarray(self.topks.copy()),
-            step_idx, self._sampling)
+        try:
+            if self.faults is not None:
+                # raised in place of the backend failing the launch:
+                # nothing host-side has mutated yet (not even the RNG
+                # step index), so the identical iteration re-dispatches
+                # on the next step()
+                self.faults.maybe_raise(self._iter, "dispatch")
+            step_idx = self._next_step_idx()
+            out = self._jit_unified(
+                self.params, self.cache, jnp.asarray(tokens), self.last_tok,
+                jnp.asarray(self.lengths.copy()), jnp.asarray(seg), bt,
+                jnp.asarray(is_dec), jnp.asarray(sample),
+                jnp.asarray(self.temps.copy()),
+                jnp.asarray(self.topks.copy()), jnp.asarray(poison),
+                step_idx, self._sampling)
+        except InjectedFault:
+            self.stats["dispatch_failures"] += 1
+            return 0
+        self.last_tok, self.cache, routing, bad = out
         if not self.ecfg.async_steps:
             self.last_tok.block_until_ready()
         dt = time.perf_counter() - t0
@@ -789,19 +947,29 @@ class ServingEngine:
             self.stats["mixed_decode_tokens"] += len(decode_rows)
             self.stats["mixed_prefill_tokens"] += int(
                 sum(int(seg[i]) for i in prefill_rows))
+        bad_host = (self._quarantine_check(bad) if self._guard
+                    else self._no_bad)
         rows = []
         finishing = False
         for i in decode_rows:
+            if bad_host[i]:
+                finishing |= self._quarantine(i)
+                continue
+            self.slots[i].nan_retries = 0
             self.lengths[i] = min(self.lengths[i] + 1, self.ecfg.max_cache)
             self.stats["decode_tokens"] += 1
             self.budgets[i] -= 1
             rows.append((i, i, self.slots[i]))
             if self.budgets[i] <= 0:
-                self._release_slot(i)
+                self._finish_slot(i)
                 finishing = True
         if decode_rows:
             self.stats["decode_steps"] += 1
         for i in prefill_rows:
+            if bad_host[i]:
+                finishing |= self._quarantine(i)
+                continue
+            self.slots[i].nan_retries = 0
             n = int(seg[i])
             self.lengths[i] += n
             self.prefill_pos[i] += n
@@ -814,11 +982,12 @@ class ServingEngine:
                 rows.append((i, i, self.slots[i]))
                 self.budgets[i] -= 1
                 if self.budgets[i] <= 0:
-                    self._release_slot(i)
+                    self._finish_slot(i)
                     finishing = True
         self._pending.append(_Pending(
             kind, tuple(rows), self.last_tok, routing, b,
-            obs_rows=tuple(i for i in range(b) if seg[i])))
+            obs_rows=tuple(i for i in range(b)
+                           if seg[i] and not bad_host[i])))
         if finishing or not self.ecfg.async_steps:
             self._harvest()
         return len(decode_rows) + len(prefill_rows)
@@ -826,25 +995,61 @@ class ServingEngine:
     # -- paged-cache bookkeeping (EngineConfig.paged; docs/DESIGN.md §7) ----
 
     def _admit_paged(self, slot: int) -> bool:
-        """Map the queue head into ``slot`` if the page pool can hold its
-        full lifetime: ceil((prompt + max_new_tokens - 1) / page_size)
-        blocks, minus every page shared through the prefix cache.
-        Whole-lifetime upfront allocation keeps decode stall-free — an
-        admitted request can never hit pool OOM mid-generation, so no
-        preemption/swap machinery is needed (lazy per-chunk allocation is
-        the standard refinement once preemption exists).  Returns False
-        with the queue untouched (FIFO preserved) when pages are short
-        even after evicting LRU prefix-cache entries."""
+        """Map the queue head into ``slot`` if the pool can hold its page
+        entitlement, minus every page shared through the prefix cache.
+
+        Entitlement: the whole lifetime — ceil((context + remaining_new
+        - 1) / page_size) blocks — by default (PR4's conservative
+        admission: an admitted request can never hit pool OOM
+        mid-generation), or only the CONTEXT's pages under
+        ``EngineConfig.overcommit``, where lazy decode growth
+        (``_ensure_decode_page``) takes the rest one page at a time.
+
+        Restore is the same operation (docs/DESIGN.md §10): a preempted
+        request's ``resume_tokens`` (prompt + everything generated
+        before preemption) is its context, and its own evicted pages ARE
+        the prefix hit — so restore is a block-table remap plus at most
+        one partial-tail re-prefill chunk, and the greedy token stream
+        continues exactly where it stopped.  Under overcommit a short
+        pool preempts strictly-lower-priority running rows (least
+        recently preempted first) until the head fits or nobody lesser
+        remains.
+
+        Returns False with the queue untouched (priority order
+        preserved) when pages stay short even after LRU eviction and
+        preemption."""
         req = self.queue[0]
-        ps = self.page_size
-        total_blocks = -(-(len(req.prompt) + req.max_new_tokens - 1) // ps)
-        hit = self.prefix.lookup(req.prompt)
-        need = total_blocks - len(hit.pages)
+        if self.faults is not None and self.faults.poll(self._iter, "alloc"):
+            # injected pool exhaustion: admission sees nothing free and
+            # nothing reclaimable this iteration — the request just
+            # stays queued (no refcount was taken)
+            self.stats["alloc_stalls"] += 1
+            return False
+        ctx = (req.resume_tokens if req.resume_tokens is not None
+               else req.prompt)
+        remaining = req.max_new_tokens - len(req.generated)
+        lifetime = sched.lifetime_pages(len(ctx), remaining, self.page_size)
+        upfront = (sched.pages_for(len(ctx), self.page_size)
+                   if self.ecfg.overcommit else lifetime)
+        hit = self.prefix.lookup(ctx)
+        need = upfront - len(hit.pages)
         if self.allocator.free_pages < need:
             # evict only when it can actually close the gap: a request
             # merely waiting for in-flight pages must NOT drain the tree
             # (it retries every iteration — unconditional eviction would
             # destroy the cached system prompt while freeing nothing)
+            if (self.allocator.free_pages + self.prefix.reclaimable_pages()
+                    >= need):
+                self.prefix.evict(need)
+        while self.allocator.free_pages < need and self.ecfg.overcommit:
+            # priority preemption: a victim's pages land in the prefix
+            # tree (reclaimable once its row references drop), so each
+            # preemption is followed by another gap-closing eviction
+            victim = sched.select_victim(self._running_rows(),
+                                         below=req.priority)
+            if victim is None:
+                break
+            self._preempt_slot(victim)
             if (self.allocator.free_pages + self.prefix.reclaimable_pages()
                     >= need):
                 self.prefix.evict(need)
@@ -872,6 +1077,7 @@ class ServingEngine:
             self.stats["cow_copies"] += 1
         self.queue.popleft()
         self.slots[slot] = req
+        self.slot_ctx[slot] = ctx
         self.slot_pages[slot] = pages
         self.block_tables[slot] = 0
         self.block_tables[slot, :len(pages)] = pages
@@ -879,9 +1085,13 @@ class ServingEngine:
         # hit.tokens, skipping exactly that much prefill work
         self.lengths[slot] = hit.tokens
         self.prefill_pos[slot] = hit.tokens
-        self.budgets[slot] = req.max_new_tokens
+        self.budgets[slot] = remaining
         self.temps[slot] = req.temperature
         self.topks[slot] = req.top_k
+        if req.status == "preempted":
+            self.stats["restores"] += 1
+            self.stats["restore_hit_tokens"] += hit.tokens
+        req.status = "running"
         if hit.tokens:
             self.stats["prefix_hits"] += 1
             self.stats["prefix_hit_tokens"] += hit.tokens
@@ -889,29 +1099,260 @@ class ServingEngine:
                                       self.allocator.pages_in_use)
         return True
 
+    def _covered(self, i: int) -> bool:
+        """Row ``i``'s next decode write (cache position ``lengths[i]``)
+        has a page under its block table."""
+        return int(self.lengths[i]) < len(self.slot_pages[i]) * self.page_size
+
+    def _running_rows(self) -> list:
+        """Victim candidates for sched.select_victim: every occupied
+        slot with its scheduling keys."""
+        return [sched.RunningRow(i, r.priority, r.last_preempt_epoch, r.seq)
+                for i, r in enumerate(self.slots) if r is not None]
+
+    def _ensure_decode_page(self, i: int) -> bool:
+        """Lazy decode-page growth (docs/DESIGN.md §10): make sure row
+        ``i``'s block table covers the position its next token writes.
+
+        Whole-lifetime admission always covers it (the fast path).  An
+        overcommitted row takes one page at a time: evict LRU prefix
+        entries if that closes the gap; if the pool is still dry,
+        preempt the least-entitled running row — possibly row ``i``
+        itself, which then yields instead of starving a peer.  Returns
+        False when the row cannot advance this iteration (preempted, or
+        page-starved under an injected alloc fault / a pool with no
+        eligible victim)."""
+        if self._covered(i):
+            return True
+        if self.faults is not None and self.faults.poll(self._iter, "alloc"):
+            self.stats["alloc_stalls"] += 1
+            return False
+        if (self.allocator.free_pages < 1
+                and self.allocator.free_pages
+                + self.prefix.reclaimable_pages() >= 1):
+            self.prefix.evict(1)
+        while self.allocator.free_pages < 1 and self.ecfg.overcommit:
+            victim = sched.select_victim(self._running_rows())
+            if victim is None:
+                break
+            self._preempt_slot(victim)
+            if victim == i:
+                return False
+            if (self.allocator.free_pages
+                    + self.prefix.reclaimable_pages() >= 1):
+                self.prefix.evict(1)
+        got = self.allocator.alloc(1)
+        if got is None:
+            self.stats["alloc_stalls"] += 1
+            return False
+        self.slot_pages[i].append(got[0])
+        self.block_tables[i, len(self.slot_pages[i]) - 1] = got[0]
+        self.stats["pages_hwm"] = max(self.stats["pages_hwm"],
+                                      self.allocator.pages_in_use)
+        return True
+
+    def _preempt_slot(self, i: int) -> None:
+        """Evict row ``i`` to the prefix cache and requeue its request —
+        the preemption protocol (docs/DESIGN.md §10).
+
+        Order matters: (1) harvest, so every in-flight token of the row
+        is on the host and the virtual prompt (prompt + generated) is
+        final; (2) insert the row's durable cache state — ``lengths[i]``
+        tokens: every full page plus the partial tail — into the prefix
+        tree as an ordinary entry; (3) free the row's own page
+        references (the tree's references keep the state alive,
+        LRU-evictable under later pressure); (4) requeue with
+        ``resume_tokens`` = the virtual prompt and the ORIGINAL
+        submission seq, so the request re-enters ahead of later
+        same-priority arrivals.  Restore (``_admit_paged``) then finds
+        its own pages as a prefix hit and re-prefills at most one
+        partial chunk: greedy token streams are identical to the
+        unpreempted run."""
+        self._harvest()
+        req = self.slots[i]
+        full = np.concatenate([req.prompt,
+                               np.asarray(req.generated, np.int32)])
+        n = int(self.lengths[i])
+        ps = self.page_size
+        k, tail = n // ps, n % ps
+        pages = self.slot_pages[i]
+        if n:
+            self.prefix.insert(full[:n], pages[:k],
+                               pages[k] if tail else -1, tail)
+        self.allocator.free(pages)
+        self.slot_pages[i] = []
+        self.block_tables[i] = 0
+        self.slots[i] = None
+        self.slot_ctx[i] = None
+        self._preempt_epoch += 1
+        req.resume_tokens = full
+        req.status = "preempted"
+        req.preemptions += 1
+        req.last_preempt_epoch = self._preempt_epoch
+        self.stats["preemptions"] += 1
+        self.preempt_log.append(
+            (self._iter, req.uid,
+             tuple((r.uid, r.priority) for r in self.slots
+                   if r is not None)))
+        self.queue.append(req)
+
+    def preempt(self, uid: int) -> bool:
+        """Preempt the running request ``uid`` now (public policy hook;
+        also how analysis R3's drive_engine pushes a preemption through
+        the trace-budget audit).  Its pages move into the prefix tree
+        and the request restores through normal admission.  Returns
+        False if ``uid`` is not currently in a slot."""
+        if not self.paged:
+            raise ValueError("preemption requires the paged KV cache "
+                             "(EngineConfig.paged=True)")
+        for i, r in enumerate(self.slots):
+            if r is not None and r.uid == uid:
+                self._preempt_slot(i)
+                return True
+        return False
+
     def _release_slot(self, i: int) -> None:
-        """Free slot ``i`` (request complete).  Paged mode releases the
-        request's page references — pages the prefix tree also holds stay
-        resident for future hits; the rest return to the free list."""
+        """Free slot ``i``'s pages and binding (exactly once: the page
+        list is emptied, so a second call is a no-op).  Paged mode drops
+        the request's page references — pages the prefix tree also holds
+        stay resident for future hits; the rest return to the free
+        list."""
         if self.paged and self.slot_pages[i]:
             self.allocator.free(self.slot_pages[i])
             self.slot_pages[i] = []
             self.block_tables[i] = 0
         self.slots[i] = None
+        self.slot_ctx[i] = None
+
+    def _finish_slot(self, i: int) -> None:
+        """Normal completion: the budget is exhausted and the final token
+        is already in flight to the harvest (which flips ``done`` when
+        the token count lands)."""
+        req = self.slots[i]
+        if req.status == "running":
+            req.status = "done"
+        self._release_slot(i)
 
     def _prefix_insert(self, i: int) -> None:
-        """Record row ``i``'s freshly prefilled prompt in the prefix tree
+        """Record row ``i``'s freshly prefilled context in the prefix tree
         (called when its prefill completes — the pages' contents are final
         from that dispatch on, in dispatch order).  Full page-aligned
         chunks become radix nodes; a non-aligned remainder becomes the
-        node's partial-tail record, shareable via copy-on-write."""
-        req = self.slots[i]
+        node's partial-tail record, shareable via copy-on-write.  For a
+        restored request the context is ``resume_tokens`` (prompt + the
+        pre-preemption generation), so its re-entered state is shareable
+        too."""
+        ctx = self.slot_ctx[i]
         ps = self.page_size
-        k = len(req.prompt) // ps
+        k = len(ctx) // ps
         pages = [int(p) for p in self.block_tables[i, :k]]
-        tail_len = len(req.prompt) - k * ps
+        tail_len = len(ctx) - k * ps
         tail_page = int(self.block_tables[i, k]) if tail_len else -1
-        self.prefix.insert(req.prompt, pages, tail_page, tail_len)
+        self.prefix.insert(ctx, pages, tail_page, tail_len)
+
+    # -- cancellation, deadlines, quarantine (docs/DESIGN.md §10) -----------
+
+    def _terminate_req(self, req: Request, status: str) -> None:
+        """Move ``req`` to a terminal state (its pages must already be
+        released).  ``done`` flips so waiters see it finished; ``status``
+        says why."""
+        req.status = status
+        req.done = True
+        self.stats[status] += 1
+
+    def _terminate_slot(self, i: int, status: str) -> None:
+        req = self.slots[i]
+        self._release_slot(i)
+        self._terminate_req(req, status)
+
+    def cancel(self, uid: int) -> bool:
+        """Abandon request ``uid``, queued or in-flight (satellite fix:
+        previously a submitted request held its slot and pages until
+        ``max_new_tokens`` completed, no matter what).
+
+        Page references are dropped exactly once (``_release_slot``
+        empties the page list) and only the ROW's references — pages the
+        prefix tree shares stay cached for other requests.  In-flight
+        tokens are harvested first, so ``generated`` holds everything
+        the request produced before the cancel.  Returns True if the
+        request was live and is now cancelled; False if unknown or
+        already terminal (a second cancel is a no-op)."""
+        req = self._all.get(uid)
+        if req is None or req.done or req.status in TERMINAL_STATES:
+            return False
+        # flush pending device steps: a record in flight may complete the
+        # request (then cancel is too late and reports False), and the
+        # bookkeeping below needs ``generated`` final
+        self._harvest()
+        if req.done:
+            return False
+        if self.queue.remove(uid) is not None:      # queued or preempted
+            self._terminate_req(req, "cancelled")
+            return True
+        for i, r in enumerate(self.slots):
+            if r is not None and r.uid == uid:
+                self._terminate_slot(i, "cancelled")
+                return True
+        return False
+
+    def _sweep_deadlines(self) -> None:
+        """Expire every request whose deadline passed (runs at the top of
+        each step; ``_now`` is monkeypatchable in tests).  Queued
+        requests just leave the queue; in-flight rows release their
+        pages through the same exactly-once path as cancel."""
+        if not self._has_deadlines:
+            return
+        now = self._now()
+        for r in list(self.queue):
+            if r.deadline_s is not None and now >= r.deadline_s:
+                if self.queue.remove(r.uid) is not None:
+                    self._terminate_req(r, "expired")
+        for i, req in enumerate(self.slots):
+            if (req is not None and req.deadline_s is not None
+                    and now >= req.deadline_s):
+                self._harvest()
+                if not req.done:
+                    self._terminate_slot(i, "expired")
+
+    def _now(self) -> float:
+        return time.perf_counter()
+
+    def _quarantine(self, i: int) -> bool:
+        """Row ``i``'s logits came back non-finite (NaN guard): withhold
+        every host-state advance so the row re-dispatches from its last
+        durable cache state next iteration (the repeated block write is
+        idempotent; in-jit, ``last_tok`` was already shielded).  After
+        ``nan_retry_limit`` consecutive bad steps the row is failed and
+        its pages released instead of spinning forever.  Returns True
+        when the row was failed (the caller's harvest boundary)."""
+        req = self.slots[i]
+        self.stats["nan_quarantines"] += 1
+        req.nan_retries += 1
+        if req.nan_retries > self.ecfg.nan_retry_limit:
+            self._terminate_slot(i, "failed")
+            return True
+        return False
+
+    def _quarantine_check(self, bad) -> np.ndarray:
+        """THE quarantine sync point (``EngineConfig.nan_guard``): fetch
+        the step's per-row finiteness verdict.  Deliberately a blocking
+        device->host read in the hot loop — the guard trades the async
+        pipeline's run-ahead for per-step integrity, the same opt-in
+        trade as ``async_steps=False`` — so it lives OUTSIDE the R4
+        host-sync scan's hot-method set as a documented boundary, like
+        ``_harvest``."""
+        return np.asarray(jax.device_get(bad))
+
+    def resilience_stats(self) -> dict:
+        """Scheduler + fault-guard counters for reporting (launch/serve,
+        benchmarks/serving_engine, the chaos harness)."""
+        s = self.stats
+        out = {k: s[k] for k in
+               ("preemptions", "restores", "restore_hit_tokens",
+                "cancelled", "expired", "failed", "alloc_stalls",
+                "dispatch_failures", "nan_quarantines", "active_hwm")}
+        out["preempt_log_len"] = len(self.preempt_log)
+        return out
 
     def paged_stats(self) -> dict:
         """Page-pool / prefix-cache counters for reporting (launch/serve,
@@ -982,6 +1423,8 @@ class ServingEngine:
                     req.first_token_s = now
                 if len(req.generated) >= req.max_new_tokens:
                     req.done = True
+                    if req.status not in TERMINAL_STATES:
+                        req.status = "done"
             self._observe_routing(rec, routing)
 
     def _observe_routing(self, rec: _Pending, routing) -> None:

@@ -73,8 +73,33 @@ class PageAllocator:
     def pages_in_use(self) -> int:
         return self.num_pages - len(self._free)
 
+    @property
+    def fully_free(self) -> bool:
+        """True when every page is back on the free list — the drain
+        invariant the resilience gates check after every preempt /
+        cancel / fault schedule."""
+        return len(self._free) == self.num_pages
+
     def refcount(self, page: int) -> int:
         return self._ref[page]
+
+    def check_consistent(self) -> None:
+        """Raise if the free list and refcounts disagree: a page on the
+        free list twice, a free page with owners, or a mapped page
+        without a reference.  The chaos harness and the resilience
+        property tests call this after every engine step, so a failure
+        path that corrupts the accounting fails loudly at the step that
+        broke it, not at drain."""
+        if len(set(self._free)) != len(self._free):
+            raise AssertionError("page on the free list twice")
+        free = set(self._free)
+        for p in range(self.num_pages):
+            if p in free and self._ref[p] != 0:
+                raise AssertionError(
+                    f"page {p} is free but has refcount {self._ref[p]}")
+            if p not in free and self._ref[p] <= 0:
+                raise AssertionError(
+                    f"page {p} is mapped but has refcount {self._ref[p]}")
 
     # -- ops ----------------------------------------------------------------
 

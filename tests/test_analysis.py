@@ -175,7 +175,7 @@ def test_r3_clean_then_flags_undocumented_width():
     bvec = jnp.zeros((b,), bool)
     fvec = jnp.zeros((b,), jnp.float32)
     eng._jit_unified(eng.params, eng.cache, jnp.zeros((b, 3), jnp.int32),
-                     ivec, ivec, ivec, None, bvec, bvec, fvec, ivec,
+                     ivec, ivec, ivec, None, bvec, bvec, fvec, ivec, fvec,
                      jnp.zeros((), jnp.int32), False)
     findings = RetraceRule(workload=None).check_engine(eng)
     assert [f.detail["body"] for f in findings] == ["unified"]
@@ -278,9 +278,9 @@ def test_r5_clean_on_real_int8_unified_program():
     ivec = jnp.zeros((b,), jnp.int32)
     bvec = jnp.zeros((b,), bool)
     fvec = jnp.zeros((b,), jnp.float32)
-    closed = jax.make_jaxpr(eng._unified, static_argnums=(12,))(
+    closed = jax.make_jaxpr(eng._unified, static_argnums=(13,))(
         eng.params, eng.cache, jnp.zeros((b, eng.chunk_len), jnp.int32),
-        ivec, ivec, ivec, None, bvec, bvec, fvec, ivec,
+        ivec, ivec, ivec, None, bvec, bvec, fvec, ivec, fvec,
         jnp.zeros((), jnp.int32), False)
     found = []
     check_closed_jaxpr(closed, leaves, lambda key, kw: found.append(key))

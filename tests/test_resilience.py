@@ -1,0 +1,444 @@
+"""ISSUE 7 tentpole: resilient serving — priority preemption with
+prefix-cache restore, deadlines/cancellation, and deterministic fault
+injection (docs/DESIGN.md §10).
+
+Three layers of guarantees:
+
+  * **scheduler** (``serving/scheduler.py``) — victim selection is total
+    and fair (priority asc, preempt-epoch asc, newest-first within a
+    class); the admission queue orders by (priority desc, seq asc) so a
+    preempted request re-enters ahead of later same-priority arrivals;
+  * **engine** — a preempted-and-restored greedy request emits the EXACT
+    token stream of an uncontended run (restore = block-table remap +
+    at most one tail re-prefill chunk); cancel and deadline expiry
+    release pages exactly once and leave prefix-tree pages alive;
+    overcommit admission completes every request under pool pressure;
+  * **faults** (``serving/faults.py``) — allocator exhaustion, failed
+    dispatch, and NaN/Inf logits are absorbed by engine guards with
+    token-identical recovery, and every failure path returns the page
+    pool to fully free.
+"""
+import numpy as np
+import pytest
+try:  # requirements-dev.txt; degrade to fixed samples when absent
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+import jax
+
+from repro.configs.base import get_config
+from repro.serving import scheduler as sched
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.faults import Fault, FaultPlan, InjectedFault
+
+ARCH = "qwen3_moe_30b_a3b"
+
+
+def nocap(arch=ARCH, **kw):
+    return get_config(arch).reduced().replace(capacity_factor=8.0, **kw)
+
+
+def _engine(cfg, *, fault_plan=None, **kw):
+    eng_kw = dict(max_batch=2, prefill_len=8, max_cache=32, async_steps=False,
+                  unified_step=True, chunk_len=3, page_size=4)
+    eng_kw.update(kw)
+    return ServingEngine(cfg, EngineConfig(**eng_kw),
+                         rng=jax.random.PRNGKey(0), fault_plan=fault_plan)
+
+
+def _prompts(seed=0, lens=(7, 5)):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 50, n) for n in lens]
+
+
+def _drain_clean(eng):
+    """Post-drain hygiene: clear the prefix tree, then the pool must be
+    fully free with consistent refcounts."""
+    eng.prefix.clear()
+    assert eng.allocator.fully_free, \
+        f"{eng.allocator.num_pages - eng.allocator.free_pages} pages leaked"
+    eng.allocator.check_consistent()
+
+
+def _step_until_decoding(eng, req, max_steps=64):
+    """Step until ``req`` occupies a slot with its prefill complete."""
+    for _ in range(max_steps):
+        eng.step()
+        slot = next((i for i, r in enumerate(eng.slots) if r is req), None)
+        if (slot is not None
+                and eng.prefill_pos[slot] >= len(eng.slot_ctx[slot])):
+            return slot
+    raise AssertionError("request never reached decode")
+
+
+# ---------------------------------------------------------------------------
+# host side: fault plans and the scheduler
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        Fault(1, "bogus-site")
+    with pytest.raises(ValueError):
+        Fault(0, "nan")                       # steps are 1-based
+    with pytest.raises(ValueError):
+        Fault(1, "nan", kind="minus-zero")
+    with pytest.raises(ValueError):           # one fault per (step, site)
+        FaultPlan([Fault(3, "nan"), Fault(3, "nan", rows=(1,))])
+    assert np.isnan(Fault(1, "nan", kind="nan").value)
+    assert np.isinf(Fault(1, "nan", kind="inf").value)
+
+
+def test_fault_plan_poll_fires_once():
+    plan = FaultPlan([Fault(2, "alloc"), Fault(4, "nan", rows=(0,))])
+    assert plan.poll(1, "alloc") is None
+    assert plan.poll(2, "alloc") is not None
+    assert plan.poll(2, "alloc") is None      # fired exactly once
+    assert not plan.all_fired()
+    assert [f.step for f in plan.unfired()] == [4]
+    with pytest.raises(InjectedFault):
+        plan.maybe_raise(4, "nan")
+    assert plan.all_fired()
+
+
+def test_fault_plan_random_is_deterministic():
+    a = FaultPlan.random(7, n_faults=5, max_step=20, max_batch=4)
+    b = FaultPlan.random(7, n_faults=5, max_step=20, max_batch=4)
+    assert [(f.step, f.site, f.rows, f.kind) for f in a] \
+        == [(f.step, f.site, f.rows, f.kind) for f in b]
+    assert len(a) == 5
+    assert len({(f.step, f.site) for f in a}) == 5    # distinct keys
+
+
+def test_pages_arithmetic():
+    assert sched.pages_for(0, 4) == 0
+    assert sched.pages_for(1, 4) == 1
+    assert sched.pages_for(8, 4) == 2
+    assert sched.pages_for(9, 4) == 3
+    # lifetime covers context + all new tokens minus the unsampled last
+    assert sched.lifetime_pages(7, 8, 4) == sched.pages_for(14, 4)
+    # a finished request (nothing left to emit) still holds its context
+    assert sched.lifetime_pages(7, 0, 4) == sched.pages_for(7, 4)
+
+
+def test_select_victim_ordering():
+    rows = [sched.RunningRow(0, priority=1, epoch=0, seq=1),
+            sched.RunningRow(1, priority=0, epoch=0, seq=2),
+            sched.RunningRow(2, priority=0, epoch=0, seq=3)]
+    # lowest priority first; within it, the NEWEST request yields
+    assert sched.select_victim(rows) == 2
+    # a row already preempted this epoch is spared over same-class peers
+    rows[2] = sched.RunningRow(2, priority=0, epoch=5, seq=3)
+    assert sched.select_victim(rows) == 1
+    # `below` restricts to strictly lower priority than the claimant
+    assert sched.select_victim(rows, below=1) in (1, 2)
+    assert sched.select_victim(rows, below=0) is None
+    assert sched.select_victim(rows, below=2, exclude=(1, 2)) == 0
+    assert sched.select_victim([]) is None
+
+
+def test_admission_queue_orders_priority_then_seq():
+    import types
+    q = sched.AdmissionQueue()
+    mk = lambda uid, pr, seq: types.SimpleNamespace(uid=uid, priority=pr,
+                                                    seq=seq)
+    q.append(mk(1, 0, 1))
+    q.append(mk(2, 5, 2))
+    q.append(mk(3, 0, 3))
+    q.append(mk(4, 5, 4))
+    assert [r.uid for r in q] == [2, 4, 1, 3]  # priority desc, FIFO within
+    # a preempted request keeps its ORIGINAL seq: re-enters ahead of
+    # later same-priority arrivals (uid 3), behind earlier ones (uid 1)
+    q.append(mk(9, 0, 2))
+    assert [r.uid for r in q] == [2, 4, 1, 9, 3]
+    assert q.remove(4).uid == 4
+    assert q.remove(4) is None
+    assert q.popleft().uid == 2
+    assert len(q) == 3 and bool(q)
+
+
+# ---------------------------------------------------------------------------
+# engine: preempt/restore, cancel, deadlines
+# ---------------------------------------------------------------------------
+
+def test_preempt_restore_token_identity():
+    """The tentpole gate: preempt a decoding request, restore it through
+    the prefix cache, and the greedy token stream is IDENTICAL to an
+    uncontended run (restore = block-table remap + one tail re-prefill)."""
+    cfg = nocap()
+    p = _prompts()[0]
+    base = _engine(cfg, paged=True)
+    uid = base.submit(p, max_new_tokens=6)
+    base.run_until_done()
+    want = list(base._all[uid].generated)
+
+    eng = _engine(cfg, paged=True)
+    uid = eng.submit(p, max_new_tokens=6)
+    req = eng._all[uid]
+    _step_until_decoding(eng, req)
+    assert eng.preempt(uid)
+    assert req.status == "preempted" and req.preemptions == 1
+    eng.run_until_done()
+    assert req.status == "done"
+    assert list(req.generated) == want
+    st = eng.resilience_stats()
+    assert st["preemptions"] == 1 and st["restores"] == 1
+    # the restore actually reused cached pages (no full re-prefill)
+    assert st["restore_hit_tokens"] > 0
+    _drain_clean(eng)
+
+
+def test_overcommit_pressure_completes_and_matches():
+    """A pool too small for both lifetimes forces the scheduler to
+    preempt under growth pressure; both requests still complete with the
+    tokens of an uncontended run."""
+    cfg = nocap()
+    p1, p2 = _prompts()
+    big = _engine(cfg, paged=True)
+    a = big.submit(p1, max_new_tokens=8)
+    b = big.submit(p2, max_new_tokens=8)
+    big.run_until_done()
+    want = [list(big._all[a].generated), list(big._all[b].generated)]
+
+    eng = _engine(cfg, paged=True, num_pages=4, overcommit=True)
+    a = eng.submit(p1, max_new_tokens=8)
+    b = eng.submit(p2, max_new_tokens=8)
+    eng.run_until_done()
+    assert eng._all[a].status == eng._all[b].status == "done"
+    assert [list(eng._all[a].generated), list(eng._all[b].generated)] == want
+    assert eng.resilience_stats()["preemptions"] >= 1
+    _drain_clean(eng)
+
+
+def test_overcommit_admits_beyond_conservative_capacity():
+    """The point of overcommit: lazy allocation admits concurrency the
+    conservative lifetime reservation refuses.  Equal pool bytes, equal
+    workload — only the admission policy differs."""
+    cfg = nocap()
+    p1, p2 = _prompts()
+    kw = dict(paged=True, num_pages=4)
+    eager = _engine(cfg, **kw)
+    eager.submit(p1, max_new_tokens=8)
+    eager.submit(p2, max_new_tokens=8)
+    eager.run_until_done()
+    lazy = _engine(cfg, overcommit=True, **kw)
+    lazy.submit(p1, max_new_tokens=8)
+    lazy.submit(p2, max_new_tokens=8)
+    lazy.run_until_done()
+    assert (lazy.resilience_stats()["active_hwm"]
+            > eager.resilience_stats()["active_hwm"])
+
+
+def test_cancel_queued_and_inflight_exactly_once():
+    cfg = nocap()
+    p1, p2 = _prompts()
+    eng = _engine(cfg, paged=True)
+    a = eng.submit(p1, max_new_tokens=6)
+    b = eng.submit(p2, max_new_tokens=6)
+    c = eng.submit(p1[:4], max_new_tokens=6)       # queued (max_batch=2)
+    assert eng.cancel(c) and eng._all[c].status == "cancelled"
+    assert not eng.cancel(c)                       # exactly once
+    eng.step(); eng.step()
+    assert eng.cancel(a) and eng._all[a].status == "cancelled"
+    assert not eng.cancel(a)
+    assert not eng.cancel(999_999)                 # unknown uid
+    eng.run_until_done()
+    assert eng._all[b].status == "done"
+    assert eng._all[a].generated == [] or eng._all[a].status == "cancelled"
+    _drain_clean(eng)
+
+
+def test_cancel_keeps_prefix_tree_pages_alive():
+    """Cancelling an in-flight request must not rip shared pages out of
+    the prefix tree: a follower over the same prompt still hits."""
+    cfg = nocap()
+    p = _prompts()[0]
+    eng = _engine(cfg, paged=True)
+    uid = eng.submit(p, max_new_tokens=6)
+    eng.run_until_done()                            # seeds the prefix tree
+    want = list(eng._all[uid].generated)
+    hits0 = eng.stats["prefix_hit_tokens"]
+
+    mid = eng.submit(p, max_new_tokens=6)           # prefix hit on admit
+    req = eng._all[mid]
+    _step_until_decoding(eng, req)
+    assert eng.cancel(mid)
+    assert eng.stats["prefix_hit_tokens"] > hits0
+    again = eng.submit(p, max_new_tokens=6)         # tree must still serve
+    eng.run_until_done()
+    assert eng.stats["prefix_hit_tokens"] > hits0
+    assert list(eng._all[again].generated) == want
+    _drain_clean(eng)
+
+
+def test_deadline_expiry_queued_and_inflight():
+    cfg = nocap()
+    p1, p2 = _prompts()
+    eng = _engine(cfg, paged=True)
+    # already-elapsed deadline: expired on the first sweep, never admitted
+    dead = eng.submit(p1, max_new_tokens=6, deadline_ms=0.0)
+    live = eng.submit(p2, max_new_tokens=6)
+    eng.step()
+    assert eng._all[dead].status == "expired"
+    assert eng._all[dead].first_token_s is None
+    # in-flight expiry: generous deadline, then jump the engine clock
+    slow = eng.submit(p1, max_new_tokens=20, deadline_ms=60_000.0)
+    req = eng._all[slow]
+    _step_until_decoding(eng, req)
+    eng._now = lambda: req.deadline_s + 1.0
+    eng.step()
+    assert req.status == "expired"
+    eng.run_until_done()
+    assert eng._all[live].status == "done"
+    st = eng.resilience_stats()
+    assert st["expired"] == 2
+    _drain_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# engine: fault guards
+# ---------------------------------------------------------------------------
+
+def test_fault_matrix_token_identical_recovery():
+    """One of each site in a single run: the alloc stall delays
+    admission, the failed dispatch re-runs the identical iteration, the
+    poisoned row quarantines and retries — and the final tokens equal
+    the fault-free run's exactly."""
+    cfg = nocap()
+    p = _prompts()[0]
+    base = _engine(cfg, paged=True)
+    uid = base.submit(p, max_new_tokens=6)
+    base.run_until_done()
+    want = list(base._all[uid].generated)
+
+    plan = FaultPlan([Fault(1, "alloc"), Fault(3, "dispatch"),
+                      Fault(5, "nan", rows=(0,))])
+    eng = _engine(cfg, paged=True, fault_plan=plan)
+    uid = eng.submit(p, max_new_tokens=6)
+    eng.run_until_done()
+    assert plan.all_fired(), plan.unfired()
+    assert eng._all[uid].status == "done"
+    assert list(eng._all[uid].generated) == want
+    st = eng.resilience_stats()
+    assert st["alloc_stalls"] == 1
+    assert st["dispatch_failures"] == 1
+    assert st["nan_quarantines"] >= 1
+    _drain_clean(eng)
+
+
+def test_nan_retry_limit_fails_request():
+    """Persistent poison exhausts the retry budget: the row is failed,
+    its pages are released, and the engine drains clean."""
+    cfg = nocap()
+    p = _prompts()[0]
+    plan = FaultPlan([Fault(s, "nan") for s in range(1, 12)])
+    eng = _engine(cfg, paged=True, fault_plan=plan, nan_retry_limit=2)
+    uid = eng.submit(p, max_new_tokens=4)
+    eng.run_until_done()
+    assert eng._all[uid].status == "failed"
+    assert eng.resilience_stats()["failed"] == 1
+    _drain_clean(eng)
+
+
+def test_fault_plan_requires_unified_engine():
+    with pytest.raises(ValueError):
+        _engine(nocap(), unified_step=False,
+                fault_plan=FaultPlan([Fault(1, "nan")]))
+
+
+def test_chaos_matrix_clean():
+    """The CI chaos-smoke gate, as a tier-1 test: every scenario absorbs
+    its faults with token-identical recovery and a fully-free pool."""
+    from repro.serving.chaos import run_matrix
+    assert run_matrix(ARCH, verbose=False) == []
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_property_preemption_fairness(seed):
+    """Property: the scheduler never preempts a request while a
+    strictly-lower-priority peer keeps running, and never the same
+    request twice in a row while any peer shares its class (the
+    preempt-epoch tiebreak) — audited from the engine's preempt log."""
+    rng = np.random.default_rng(seed)
+    cfg = nocap()
+    eng = _engine(cfg, paged=True, num_pages=5, overcommit=True)
+    uids = [eng.submit(rng.integers(0, 50, int(rng.integers(4, 8))),
+                       max_new_tokens=8, priority=int(rng.integers(0, 3)))
+            for _ in range(4)]
+    eng.run_until_done()
+    assert all(eng._all[u].status == "done" for u in uids)
+    prev_uid = None
+    for _step, uid, peers in eng.preempt_log:
+        vp = eng._all[uid].priority
+        assert all(p >= vp for _u, p in peers), \
+            (uid, vp, peers, "victim outlived a lower-priority peer")
+        if uid == prev_uid:
+            # re-preempting the same request back-to-back is only fair
+            # when it is strictly the lowest class left running
+            assert all(p > vp for _u, p in peers), (uid, peers)
+        prev_uid = uid
+    _drain_clean(eng)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_property_continuous_load_completes(seed):
+    """Property: under continuous arrivals into an overcommitted pool,
+    every admitted request eventually completes (no starvation, no
+    preempt/restore livelock)."""
+    rng = np.random.default_rng(seed)
+    cfg = nocap()
+    eng = _engine(cfg, paged=True, num_pages=5, overcommit=True)
+    pending = [(rng.integers(0, 50, int(rng.integers(3, 8))),
+                int(rng.integers(0, 3))) for _ in range(6)]
+    uids = []
+    steps = 0
+    while pending or eng.queue or any(s is not None for s in eng.slots):
+        eng.step()
+        steps += 1
+        if pending and steps % int(rng.integers(2, 5)) == 0:
+            p, pr = pending.pop(0)
+            uids.append(eng.submit(p, max_new_tokens=6, priority=pr))
+        assert steps < 2_000, "livelock: load never drained"
+    eng.flush()
+    assert all(eng._all[u].status == "done" for u in uids)
+    _drain_clean(eng)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_property_pool_free_after_chaos(seed):
+    """Property: after any randomized schedule of preempts, cancels, and
+    injected faults, every page returns to the free list and refcounts
+    stay consistent — no failure path leaks or double-frees."""
+    rng = np.random.default_rng(seed)
+    cfg = nocap()
+    plan = FaultPlan.random(seed, n_faults=4, max_step=24, max_batch=2)
+    eng = _engine(cfg, paged=True, num_pages=6, overcommit=True,
+                  fault_plan=plan)
+    uids = [eng.submit(rng.integers(0, 50, int(rng.integers(3, 8))),
+                       max_new_tokens=6, priority=int(rng.integers(0, 3)))
+            for _ in range(4)]
+    for _ in range(30):
+        eng.step()
+        op = rng.random()
+        victim = int(rng.choice(uids))
+        if op < 0.15:
+            eng.cancel(victim)
+        elif op < 0.3:
+            try:
+                eng.preempt(victim)
+            except ValueError:
+                pass
+        eng.allocator.check_consistent()       # invariant holds mid-flight
+    eng.run_until_done()
+    # every request reached a terminal state (done, cancelled, or failed
+    # by the injected NaNs — all legal; leaking is not)
+    from repro.serving.engine import TERMINAL_STATES
+    assert all(eng._all[u].status in TERMINAL_STATES for u in uids)
+    _drain_clean(eng)
