@@ -37,6 +37,12 @@ sound gate because int8 rounding shifts logits ~1e-2, far above greedy
 tie gaps, so the raw-fp token agreement is *reported* instead), and
 (b) weight bytes shrink >= 3.5x at int8-with-fp-router.
 
+A Pallas paged-attention round (``run_paged_kernel_ab``, skip with
+``--skip-paged-kernel``; PR 8, docs/DESIGN.md §11) A/Bs the paged engine's
+reference virtual-cache gather against the block-table kernel
+(``EngineConfig.paged_kernel``) on wall tok/s and the analytic
+per-decode-step attention bytes-read, gated on identical greedy tokens.
+
 A staggered-arrival round (``run_staggered``, skip with
 ``--skip-staggered``) A/Bs the two-program reference against the unified
 scheduler on TTFT p50/p95 and decode-stall time — the latency metrics the
@@ -384,6 +390,76 @@ def run_quant_ab(base_cfg, *, requests, new_tokens, prompt_len, max_batch,
     return out
 
 
+def run_paged_kernel_ab(base_cfg, *, requests, new_tokens, prompt_len,
+                        max_batch, chunk_len, page_size, repeat=1, seed=0):
+    """Pallas paged-attention A/B (PR 8 acceptance): the paged engine with
+    the reference virtual-cache gather vs the block-table kernel
+    (``EngineConfig.paged_kernel``), identical params / prompts / pool
+    geometry.  Gate: greedy token streams are IDENTICAL — the kernel's
+    flash online-softmax over pages is the same attention, computed
+    without materializing the (B, NB*page_size, Hkv, hd) virtual cache.
+    Alongside wall tok/s, reports the analytic per-decode-step attention
+    bytes-read of each path (core/perf_model.paged_attention_read_bytes):
+    the gather path always reads the full block-table extent, the kernel
+    only the live pages — the memory story CI's interpret-mode timing
+    cannot show (Pallas interpret mode is a correctness harness, not a
+    performance one; the wall-clock column is honest but only meaningful
+    on a real TPU backend)."""
+    from repro.core import perf_model
+
+    kw = dict(batched_prefill=True, async_steps=True, donate_buffers=True,
+              unified_step=True, paged=True)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, base_cfg.vocab_size, prompt_len)
+               for _ in range(requests)]
+    out = {}
+    reps: dict[str, list] = {"gather": [], "kernel": []}
+    for _ in range(max(repeat, 1)):
+        for name, pk in (("gather", False), ("kernel", True)):
+            eng = make_engine(base_cfg, dict(kw, paged_kernel=pk),
+                              prompt_len=prompt_len, new_tokens=new_tokens,
+                              max_batch=max_batch, chunk_len=chunk_len,
+                              page_size=page_size)
+            eng.submit(prompts[0], max_new_tokens=2)      # compile warmup
+            eng.run_until_done()
+            eng.prefix.clear()
+            for k in eng.stats:
+                eng.stats[k] = type(eng.stats[k])()
+            t0 = time.perf_counter()
+            for p in prompts:
+                eng.submit(p, max_new_tokens=new_tokens)
+            done = eng.run_until_done()
+            wall = time.perf_counter() - t0
+            # every row-step of the workload's decode trajectory (length
+            # prompt_len..prompt_len+new_tokens-1 per request), NOT the
+            # end-of-decode snapshot — at the last step every row fills
+            # its block table and the paths read equal bytes trivially
+            traj = [prompt_len + i for i in range(new_tokens)
+                    for _ in range(requests)]
+            rd = perf_model.paged_attention_read_bytes(
+                base_cfg, lengths=traj, page_size=page_size,
+                max_blocks=eng.max_blocks)
+            reps[name].append({
+                "wall_s": wall,
+                "tok_per_s_wall": requests * (prompt_len + new_tokens) / wall,
+                "attn_read_bytes_per_row_step": (
+                    rd["kernel_bytes"] if pk else rd["gather_bytes"])
+                    / len(traj),
+                "generated": {r.uid: list(r.generated) for r in done},
+            })
+            assert reps[name][-1]["generated"] == reps[name][0]["generated"]
+    for name in reps:
+        out[name] = min(reps[name], key=lambda r: r["wall_s"])
+    gens = {k: r.pop("generated") for k, r in out.items()}
+    # the PR-8 gate: the kernel changes HOW attention reads the pool,
+    # never which tokens come out
+    assert gens["kernel"] == gens["gather"], \
+        "paged-attention kernel diverged from the virtual-cache gather"
+    out["attn_read_ratio"] = (out["gather"]["attn_read_bytes_per_row_step"]
+                              / out["kernel"]["attn_read_bytes_per_row_step"])
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_moe_30b_a3b")
@@ -422,6 +498,10 @@ def main():
                     help="skip the overcommit preemption A/B round "
                          "(conservative vs overcommitted admission at "
                          "equal pool bytes, PR 7 gates)")
+    ap.add_argument("--skip-paged-kernel", action="store_true",
+                    help="skip the Pallas paged-attention A/B round "
+                         "(virtual-cache gather vs block-table kernel, "
+                         "PR 8 gates)")
     args = ap.parse_args()
     if args.shared_prefix_len >= args.prompt_len:
         ap.error("--shared-prefix-len must be < --prompt-len")
@@ -614,6 +694,28 @@ def main():
               str(r["restores"])]
              for nm, r in preempt_ab.items()]))
         results["preempt_ab"] = preempt_ab
+    # Pallas paged-attention A/B (PR 8): virtual-cache gather vs the
+    # block-table kernel — token equality gated inside; the bytes-read
+    # column is the analytic memory story (interpret-mode wall clock on
+    # CPU is a correctness harness, not a perf measurement)
+    paged_kernel_ab = {}
+    if not args.skip_paged_kernel:
+        paged_kernel_ab = run_paged_kernel_ab(
+            base_cfg, requests=args.requests, new_tokens=args.new_tokens,
+            prompt_len=args.prompt_len, max_batch=args.max_batch,
+            chunk_len=args.chunk_len, page_size=args.page_size,
+            repeat=args.repeat)
+        print(f"\npaged-attention kernel (page size {args.page_size}, "
+              "tokens gated identical):")
+        print(markdown_table(
+            ["attention", "wall s", "tok/s", "attn MB/row-step"],
+            [[nm, f"{r['wall_s']:.2f}", f"{r['tok_per_s_wall']:.1f}",
+              f"{r['attn_read_bytes_per_row_step'] / 1e6:.3f}"]
+             for nm, r in paged_kernel_ab.items()
+             if isinstance(r, dict)]))
+        print("attn bytes-read gather/kernel: "
+              f"{paged_kernel_ab['attn_read_ratio']:.2f}x")
+        results["paged_kernel_ab"] = paged_kernel_ab
     path = save_result("serving_engine", results)
     print(f"saved {path}")
 
@@ -655,6 +757,8 @@ def main():
         }
     if preempt_ab:
         bench["preempt_ab"] = preempt_ab
+    if paged_kernel_ab:
+        bench["paged_kernel_ab"] = paged_kernel_ab
     if args.note:
         bench["note"] = args.note
     with open(BENCH_JSON, "w") as f:

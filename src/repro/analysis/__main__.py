@@ -26,8 +26,10 @@ def _parse_args(argv=None):
         prog="python -m repro.analysis",
         description="static analysis of the engine's serving programs")
     p.add_argument("--arch", default="qwen3_moe_30b_a3b")
-    p.add_argument("--programs", default="decode,unified,paged,int8",
-                   help="comma list of decode,unified,paged,int8")
+    p.add_argument("--programs",
+                   default="decode,unified,paged,int8,paged_kernel",
+                   help="comma list of "
+                        "decode,unified,paged,int8,paged_kernel")
     p.add_argument("--rules", default="R1,R2,R3,R4,R5,R6",
                    help="comma list of rule ids to run")
     p.add_argument("--warn-only", default="",
@@ -64,6 +66,11 @@ def main(argv=None) -> int:
     warn_only = {r.strip().upper()
                  for r in args.warn_only.split(",") if r.strip()}
     variants = [v.strip() for v in args.programs.split(",") if v.strip()]
+    if n_dev > 1 and "paged_kernel" in variants:
+        # the Pallas paged-attention path is single-host by contract
+        # (serving keeps the gather path under GSPMD; docs/DESIGN.md §11)
+        print("skipping paged_kernel on a mesh (single-host variant)")
+        variants = [v for v in variants if v != "paged_kernel"]
 
     mesh = None
     if n_dev > 1:
@@ -91,7 +98,8 @@ def main(argv=None) -> int:
         retrace = RetraceRule()
         kinds = [k for k, wanted in (
             ("unified", any(v in variants
-                            for v in ("unified", "paged", "int8"))),
+                            for v in ("unified", "paged", "int8",
+                                      "paged_kernel"))),
             ("decode", "decode" in variants)) if wanted]
         for variant in kinds:
             eng = programs_lib.build_engine(variant, args.arch, mesh=mesh,

@@ -14,11 +14,48 @@ prunes only unused trailing scalars, never the used weight/cache prefix —
 ``TracedProgram.entry_param_count`` would drop below
 ``n_param_leaves + n_cache`` if that assumption ever broke, which this
 rule reports as its own finding instead of guessing).
+
+PR8 extends the invariant to the paged-attention kernel variant
+(``EngineConfig.paged_kernel``): beyond the alias/copy checks, the
+compiled program must contain no GATHER materializing a row-batch
+virtual cache — the (B, NB*page_size, Hkv, hd) buffer the reference
+paged path builds per pool leaf, which the Pallas block-table kernel
+exists to remove.  ``virtual_cache_traffic`` is the detector; the
+gather-path program provably trips it (tests/test_hlo_analysis.py uses
+it as the tripwire baseline, the same pattern as the undonated-baseline
+test).
 """
 from __future__ import annotations
 
 from repro.analysis.framework import Rule
 from repro.launch import hlo
+
+
+def virtual_cache_sizes(prog) -> set:
+    """Per-(layer, leaf) virtual-cache byte sizes for a paged program: the
+    (B, NB*page_size, Hkv, ·) buffer the gather path materializes from a
+    pool leaf of (L, P, page_size, Hkv, ·).  Exact sizes, because MoE
+    expert-weight gathers are legitimately pool-scale and a >= threshold
+    would flag them."""
+    eng = prog.engine
+    n_layers = prog.cfg.num_layers
+    scale = prog.batch * eng.max_blocks
+    return {nb // (n_layers * eng.num_pages) * scale
+            for nb in prog.cache_bytes}
+
+
+def virtual_cache_traffic(prog) -> list:
+    """Every gather or copy in ``prog`` whose result is exactly a
+    virtual-cache buffer, as (kind, line, bytes)."""
+    sizes = virtual_cache_sizes(prog)
+    lo = min(sizes)
+    out = [("gather", line, nb)
+           for line, nb in hlo.sized_gathers(prog.hlo_text, lo)
+           if nb in sizes]
+    out += [("copy", line, nb)
+            for line, nb in hlo.sized_copies(prog.hlo_text, lo)
+            if nb in sizes]
+    return out
 
 
 class DonationAliasRule(Rule):
@@ -65,4 +102,16 @@ class DonationAliasRule(Rule):
                 prog.name,
                 f"cache-sized copy ({nb} B): {line[:120]}",
                 bytes=nb, line=line))
+        if getattr(prog.ecfg, "paged_kernel", False):
+            # the kernel variant's reason to exist: no virtual-cache
+            # materialization — neither as a gather (the reference path's
+            # page indirection) nor as a copy of the gathered buffer
+            for kind, line, nb in virtual_cache_traffic(prog):
+                findings.append(self.finding(
+                    prog.name,
+                    f"virtual-cache-sized {kind} ({nb} B) in the "
+                    f"paged_kernel program — attention is materializing "
+                    f"the (B, NB*page_size, Hkv, ·) buffer the Pallas "
+                    f"kernel must avoid: {line[:120]}",
+                    bytes=nb, line=line))
         return findings

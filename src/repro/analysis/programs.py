@@ -14,9 +14,11 @@ text plus the tree facts every rule needs:
   * QuantTensor data/scale sibling leaf indices (R5's taint seeds);
   * mesh shard counts (R2's prediction inputs).
 
-The four CLI variants: ``decode`` (reference one-token step), ``unified``
+The five CLI variants: ``decode`` (reference one-token step), ``unified``
 (mixed prefill/decode block), ``paged`` (page-pool unified), ``int8``
-(unified over the quantized weight store).
+(unified over the quantized weight store), ``paged_kernel`` (page pool
+attended through the Pallas block-table kernel — same program shape as
+``paged``, minus the virtual-cache gather R1 lints for).
 """
 from __future__ import annotations
 
@@ -33,7 +35,7 @@ from repro.core.quant import QuantTensor
 from repro.serving.engine import EngineConfig, ServingEngine
 
 DEFAULT_ARCH = "qwen3_moe_30b_a3b"
-VARIANTS = ("decode", "unified", "paged", "int8")
+VARIANTS = ("decode", "unified", "paged", "int8", "paged_kernel")
 
 _ENTRY_PARAM_RE = re.compile(r"parameter\((\d+)\)")
 
@@ -137,6 +139,15 @@ def build_engine(variant: str, arch: str = DEFAULT_ARCH, *, donate: bool = True,
         ekw.update(unified_step=True, chunk_len=4)
     if variant == "paged":
         ekw.update(paged=True, page_size=8)
+    if variant == "paged_kernel":
+        # page_size 5 / 9-page pool: deliberately OFF the auto pool size
+        # (max_batch * max_blocks) so the three buffer families R1 must
+        # tell apart — virtual cache (B*NB*ps slots), per-layer pool
+        # slice (num_pages*ps slots), MoE dispatch (B*T token rows) —
+        # all have distinct byte sizes and exact-size matching of
+        # virtual-cache traffic cannot collide (auto pools make slice
+        # == virtual ALWAYS, since num_pages = B * max_blocks)
+        ekw.update(paged=True, page_size=5, num_pages=9, paged_kernel=True)
     ekw.update(ecfg_kw or {})
     return ServingEngine(cfg, EngineConfig(**ekw), mesh=mesh)
 

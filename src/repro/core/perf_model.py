@@ -461,6 +461,27 @@ def kv_bytes_per_token(cfg=None, *, n_layers: int = 0, num_kv_heads: int = 0,
     return float(n_layers * per_tok)
 
 
+def paged_attention_read_bytes(cfg, *, lengths, page_size: int,
+                               max_blocks: int) -> dict:
+    """Per-decode-step attention K/V bytes READ, gather path vs Pallas
+    kernel, for a batch whose rows hold ``lengths`` context tokens.
+
+    The gather path (models/attention.attn_block_step_paged) materializes
+    every row's full block-table reach — ``max_blocks * page_size`` slots
+    per row regardless of how many hold tokens — while the kernel
+    (kernels/paged_attn.py) walks only the pages a row's live length
+    touches (beyond-length grid steps re-read the last live page, which
+    Pallas elides).  Both read whole pages: that rounding is the page
+    granularity, not a kernel artifact.  Returns per-step byte totals and
+    their ratio — the virtual-cache traffic the kernel removes."""
+    bpt = kv_bytes_per_token(cfg)
+    gather = len(list(lengths)) * max_blocks * page_size * bpt
+    kernel = sum(-(-(int(n) + 1) // page_size) * page_size
+                 for n in lengths) * bpt
+    return {"gather_bytes": float(gather), "kernel_bytes": float(kernel),
+            "ratio": float(gather / kernel) if kernel else float("inf")}
+
+
 def max_concurrent_requests(pool_bytes: float, bytes_per_token: float,
                             mean_context: int, *, page_size: int = 0,
                             slot_len: int = 0) -> int:

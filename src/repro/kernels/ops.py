@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 
 from repro.core import quant
-from repro.kernels import flash_attn, moe_gemm, ref
+from repro.kernels import flash_attn, moe_gemm, paged_attn, ref
 
 
 def _interpret() -> bool:
@@ -42,3 +42,18 @@ def flash_attention(q, k, v, *, causal=True, window=None,
 
 
 flash_attention_ref = ref.flash_attention_ref
+
+
+def paged_attention(q, cache, block_tables, lengths, seg_lens, *,
+                    window=None, block_q=128):
+    """Block-table paged attention straight off the page-pool cache dict
+    (models/attention.paged_layer_cache_spec leaves) — decode (T=1) and
+    chunked prefill (T>1) share one kernel.  int8 pools dispatch the
+    in-kernel-dequant variant off their sibling scale leaves."""
+    return paged_attn.paged_attention(
+        q, cache["k"], cache["v"], block_tables, lengths, seg_lens,
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
+        window=window, block_q=block_q, interpret=_interpret())
+
+
+paged_attention_ref = ref.paged_attention_ref

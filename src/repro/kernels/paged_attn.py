@@ -1,0 +1,189 @@
+"""Pallas TPU kernel: paged attention over the block-table page pool.
+
+Since PR 4 the paged engine has attended by GATHERING each row's pages
+into a (B, NB·ps, Hkv, hd) virtual cache — a pool-scale read+write every
+step that dominates once pools grow to production size (ROADMAP item 1).
+This kernel walks the block table instead: the grid's innermost axis
+iterates a row's pages, each (ps, hd) K/V tile is DMA'd straight from the
+donated pool into VMEM, and a flash-style online softmax accumulates the
+output page by page.  Attention bytes then scale with ``lengths[b]``, not
+pool size, and no virtual cache ever exists on either the decode (T=1) or
+chunked-prefill (T>1) path.
+
+  grid = (B, Hkv, TG/bq, NB)   — pages innermost, VMEM scratch carry
+  q    : (B, Hkv, TG, hd) block (1, 1, bq, hd); row r = (token r//G,
+         group r%G), i.e. the G query heads of one kv head interleaved
+         per token (grouped GQA without a gqa_repeat materialization)
+  k/v  : pool (P, ps, Hkv, hd) block (1, ps, 1, hd); the index map reads
+         ``block_tables`` from SMEM (scalar prefetch) to pick the page
+  out  : (B, Hkv, TG, hd) block (1, 1, bq, hd), written on the last page
+
+Block-table entries past a row's live length are clamped to the row's
+last valid index in the index map, so Pallas's revisit-elision skips the
+DMA entirely (same page index twice = no copy) and the position mask
+guarantees correctness regardless of what the tile holds.  int8 KV pools
+ship their sibling fp32 scale leaves as two extra inputs and dequantize
+the (ps, hd) tile in VMEM, the way moe_gemm's quant kernel does for
+expert weights.
+
+Validated against kernels/ref.py::paged_attention_ref in interpret mode
+on CPU; TPU is the deployment target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, seg_ref, q_ref, k_ref, v_ref, *rest,
+            nb: int, ps: int, g: int, bq: int, t: int, scale: float,
+            window: int | None, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    kstep = pl.program_id(3)
+
+    @pl.when(kstep == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # pages past every live position contribute nothing: skip the math
+    # (their DMA was already elided by the clamped index map)
+    @pl.when(kstep * ps <= len_ref[b] + t - 1)
+    def _accumulate():
+        q = q_ref[0, 0]                             # (bq, hd)
+        k = k_ref[0, :, 0, :]                       # (ps, hd)
+        v = v_ref[0, :, 0, :]
+        if quantized:
+            # in-VMEM dequant from the sibling scale tiles; cast to the
+            # q dtype so logits match the gather path's dequantize_kv bit
+            # for bit
+            k = (k.astype(jnp.float32) * ks_ref[0, :, 0, :]).astype(q.dtype)
+            v = (v.astype(jnp.float32) * vs_ref[0, :, 0, :]).astype(q.dtype)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, ps)
+
+        # q row r attends as token r//g at absolute position len + r//g;
+        # rows of padded/invalid tokens (t_idx >= seg) mask everything
+        row = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 0)
+        t_idx = row // g
+        slot = kstep * ps + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
+        qp = jnp.where(t_idx < seg_ref[b], len_ref[b] + t_idx, -1)
+        mask = slot <= qp
+        if window is not None:
+            mask = mask & (slot > qp - window)
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]                         # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)                 # (bq, ps)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)              # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kstep == nb - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _page_index(i, bt_ref, len_ref, b, *, nb: int, ps: int, t: int,
+                num_pages: int):
+    """Pool page for grid page-step ``i`` of row ``b``, clamped so every
+    step past the row's live extent re-reads the last live page (Pallas
+    elides the unchanged DMA).  Table entries are clamped to the pool the
+    way the gather path clips: OOB-sentinel writes never reach the table,
+    but unallocated blocks hold 0 and a hostile table must not index out
+    of the pool."""
+    last = jnp.maximum(len_ref[b] + t - 1, 0) // ps
+    i_eff = jnp.minimum(i, jnp.minimum(last, nb - 1))
+    return jnp.clip(bt_ref[b, i_eff], 0, num_pages - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q",
+                                             "interpret"))
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array,
+                    seg_lens: jax.Array, *, k_scale: jax.Array | None = None,
+                    v_scale: jax.Array | None = None,
+                    window: int | None = None, block_q: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Paged flash attention: q (B, T, Hq, hd) + pool (P, ps, Hkv, hd)
+    + block_tables (B, NB) -> (B, T, Hq, hd).
+
+    Token t of row b sits at absolute position ``lengths[b] + t`` and
+    attends every pool slot holding positions <= its own (causal over the
+    block table), optionally windowed; tokens with ``t >= seg_lens[b]``
+    are padding and get a zero output row.  ``k_scale``/``v_scale`` are
+    the int8 pool's sibling fp32 scale leaves (P, ps, Hkv, 1)."""
+    b, t, hq, hd = q.shape
+    num_pages, ps, hkv, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    g = hq // hkv
+    tg = t * g
+    bq = min(block_q, tg)
+    tgp = -(-tg // bq) * bq
+    n_q = tgp // bq
+    # (B,T,Hq,hd) -> (B,T,Hkv,G,hd) -> (B,Hkv,TG,hd): kernel row r is
+    # (token r//G, q-head group r%G) of kv head h
+    qr = q.reshape(b, t, hkv, g, hd).transpose(0, 2, 1, 3, 4)
+    qr = qr.reshape(b, hkv, tg, hd)
+    if tgp != tg:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, tgp - tg), (0, 0)))
+
+    quantized = k_scale is not None
+    idx = functools.partial(_page_index, nb=nb, ps=ps, t=t,
+                            num_pages=num_pages)
+    q_spec = pl.BlockSpec(
+        (1, 1, bq, hd), lambda bi, h, qi, ki, bt, ln, sg: (bi, h, qi, 0))
+    pool_spec = pl.BlockSpec(
+        (1, ps, 1, hd),
+        lambda bi, h, qi, ki, bt, ln, sg: (idx(ki, bt, ln, bi), 0, h, 0))
+    in_specs = [q_spec, pool_spec, pool_spec]
+    inputs = [qr, k_pool, v_pool]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, ps, 1, 1),
+            lambda bi, h, qi, ki, bt, ln, sg: (idx(ki, bt, ln, bi), 0, h, 0))
+        in_specs += [scale_spec, scale_spec]
+        inputs += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, n_q, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, hd), lambda bi, h, qi, ki, bt, ln, sg: (bi, h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, nb=nb, ps=ps, g=g, bq=bq, t=t,
+                          scale=hd ** -0.5, window=window,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, tgp, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      seg_lens.astype(jnp.int32), *inputs)
+    out = out[:, :, :tg].reshape(b, hkv, t, g, hd).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, t, hq, hd)

@@ -26,6 +26,58 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       preferred_element_type=jnp.float32).astype(q.dtype)
 
 
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_tables: jax.Array, lengths: jax.Array,
+                        seg_lens: jax.Array, *, k_scale=None, v_scale=None,
+                        window: int | None = None) -> jax.Array:
+    """Page-walk oracle for kernels/paged_attn.py (fp + int8 pools).
+
+    Walks each row's block table page by page, concatenates the pages
+    into that row's linear cache view (virtual slot s = absolute position
+    s), then runs dense masked grouped-GQA attention.  Written as the
+    flash recurrence collapsed to one step so fully-masked (padding) rows
+    come out exactly zero, like the kernel."""
+    b, t, hq, hd = q.shape
+    num_pages, ps, hkv, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    g = hq // hkv
+
+    def walk(pool, scale):
+        pages = [jnp.take(pool, jnp.clip(block_tables[:, i], 0,
+                                         num_pages - 1), axis=0)
+                 for i in range(nb)]                  # each (B, ps, Hkv, ·)
+        lin = jnp.concatenate(pages, axis=1)          # (B, S, Hkv, ·)
+        if scale is not None:
+            spages = [jnp.take(scale, jnp.clip(block_tables[:, i], 0,
+                                               num_pages - 1), axis=0)
+                      for i in range(nb)]
+            lin = (lin.astype(jnp.float32)
+                   * jnp.concatenate(spages, axis=1)).astype(q.dtype)
+        return lin
+
+    k = walk(k_pool, k_scale)
+    v = walk(v_pool, v_scale)
+    qg = q.reshape(b, t, hkv, g, hd)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qg, k,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    slot = jnp.arange(nb * ps)[None, None, :]
+    qp = jnp.where(jnp.arange(t)[None, :] < seg_lens[:, None],
+                   lengths[:, None] + jnp.arange(t), -1)[:, :, None]
+    mask = slot <= qp
+    if window is not None:
+        mask = mask & (slot > qp - window)
+    mask5 = mask[:, None, None, :, :]                 # (B,1,1,T,S)
+    logits = jnp.where(mask5, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.where(mask5, jnp.exp(logits - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-30)
+    return (out.transpose(0, 3, 1, 2, 4)
+            .reshape(b, t, hq, hd).astype(q.dtype))
+
+
 def moe_ffn_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
                 w_down: jax.Array) -> jax.Array:
     """Grouped SwiGLU expert FFN. x: (E, C, D) -> (E, C, D)."""

@@ -371,6 +371,36 @@ def sized_copies(hlo_text: str, min_bytes: int) -> list[tuple[str, int]]:
     return out
 
 
+def sized_gathers(hlo_text: str, min_bytes: int) -> list[tuple[str, int]]:
+    """Every ``gather`` instruction whose RESULT buffer is >= ``min_bytes``,
+    as (stripped instruction line, result bytes).
+
+    The paged-attention lint (analysis rule R1 on the ``paged_kernel``
+    variant) uses this on the compiled unified step: the gather-path
+    program materializes each row's pages as a (B, NB*page_size, Hkv, hd)
+    virtual cache — an HLO ``gather`` of exactly that size per pool leaf —
+    while the Pallas block-table kernel must contain none (the kernel's
+    page walk is BlockSpec indexing inside a custom-call, invisible to
+    XLA's gather op).  Matching is by result size, not operand size: MoE
+    expert-weight gathers legitimately read pool-scale operands."""
+    out = []
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _, result_part, opcode, _ = m.groups()
+        if opcode != "gather":
+            continue
+        shapes = _SHAPE_RE.findall(result_part)
+        if not shapes:
+            continue
+        nb = shape_bytes(*shapes[0])
+        if nb >= min_bytes:
+            out.append((line, nb))
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class AliasPair:
     """One entry of the module's ``input_output_alias`` map.

@@ -36,7 +36,8 @@ def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
                unified: bool = True, chunk_len: int = 32,
                token_budget: int = 0, temperature: float = 0.0,
                top_k: int = 0, paged: bool = False, page_size: int = 16,
-               num_pages: int = 0, shared_prefix: int = 0,
+               num_pages: int = 0, paged_kernel: bool = False,
+               shared_prefix: int = 0,
                weight_quant: str | None = None, fit_cfg=None,
                priorities=None, deadline_ms: float | None = None,
                overcommit: bool = False):
@@ -49,7 +50,8 @@ def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
         batched_prefill=not legacy, async_steps=not legacy,
         unified_step=unified and not legacy, chunk_len=chunk_len,
         token_budget=token_budget, paged=paged, page_size=page_size,
-        num_pages=num_pages, overcommit=overcommit))
+        num_pages=num_pages, paged_kernel=paged_kernel,
+        overcommit=overcommit))
     rng = np.random.default_rng(seed)
     sysp = rng.integers(0, cfg.vocab_size, shared_prefix)
     for k in range(requests):
@@ -88,6 +90,22 @@ def serve_demo(cfg, *, requests: int, new_tokens: int, prompt_len: int,
               f"{ps['num_pages']} pages in use, high-water "
               f"{ps['pages_hwm']} ({ps['pool_utilization']:.1%} of pool), "
               f"page_size {ps['page_size']}")
+        if ps.get("paged_kernel"):
+            # attention-read model at end-of-generation context: what the
+            # block-table kernel reads vs what the gather path would have
+            # mean over the decode trajectory, not the end-of-decode
+            # snapshot — at the last step every row fills its block table
+            # and the two paths read the same bytes by construction
+            rb = perf_model.paged_attention_read_bytes(
+                cfg, lengths=[prompt_len + i for i in range(new_tokens)
+                              for _ in range(max_batch)],
+                page_size=page_size, max_blocks=eng.max_blocks)
+            steps = max(new_tokens, 1)
+            print(f"paged-attention kernel : block-table decode in VMEM, "
+                  f"{rb['kernel_bytes'] / steps / 1e6:.2f} MB/step "
+                  f"attention reads vs "
+                  f"{rb['gather_bytes'] / steps / 1e6:.2f} MB gather "
+                  f"({rb['ratio']:.1f}x)")
         print(f"prefix cache           : hit rate {ps['prefix_hit_rate']:.1%}"
               f" ({ps['prefix_hits']}/{ps['prefix_lookups']} lookups), "
               f"{ps['prefix_hit_tokens']} prefill tokens skipped, "
@@ -158,6 +176,12 @@ def main():
     ap.add_argument("--num-pages", type=int, default=0,
                     help="paged mode: pool size in pages (0 = auto: the "
                          "contiguous layout's token capacity)")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="paged mode: attend through the Pallas "
+                         "block-table kernel (kernels/paged_attn.py) "
+                         "instead of gathering a virtual cache — "
+                         "attention reads scale with row lengths, not "
+                         "pool size (docs/DESIGN.md §11)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt shared by every request "
                          "(exercises the prefix cache in --paged mode)")
@@ -185,6 +209,9 @@ def main():
     if args.overcommit and not args.paged:
         ap.error("--overcommit requires --paged (it is a page-pool "
                  "admission policy)")
+    if args.paged_kernel and not args.paged:
+        ap.error("--paged-kernel requires --paged (the kernel attends "
+                 "through the page pool's block tables)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -195,7 +222,8 @@ def main():
                chunk_len=args.chunk_len, token_budget=args.token_budget,
                temperature=args.temperature, top_k=args.top_k,
                paged=args.paged, page_size=args.page_size,
-               num_pages=args.num_pages, shared_prefix=args.shared_prefix,
+               num_pages=args.num_pages, paged_kernel=args.paged_kernel,
+               shared_prefix=args.shared_prefix,
                weight_quant=args.weight_quant,
                fit_cfg=get_config(args.arch), priorities=args.priority,
                deadline_ms=args.deadline_ms, overcommit=args.overcommit)

@@ -527,7 +527,8 @@ def attn_block_step_paged(p: dict, cfg, cache: dict, x: Array,
                           positions: Array, lengths: Array, seg_lens: Array,
                           block_tables: Array, window: int | None,
                           mrope_positions: Array | None = None,
-                          mesh=None) -> tuple[Array, dict]:
+                          mesh=None, use_kernel: bool = False
+                          ) -> tuple[Array, dict]:
     """``attn_block_step`` over a paged KV cache.
 
     cache: pool leaves ``(num_pages, page_size, Hkv, hd)`` shared by every
@@ -546,10 +547,17 @@ def attn_block_step_paged(p: dict, cfg, cache: dict, x: Array,
     position s, so the position-offset causal mask of the contiguous path
     applies unchanged (the gather is the pure-JAX form of a paged-attention
     kernel's block-table indirection; it reads at most the same bytes the
-    contiguous layout's full-cache attention read).  Ring caches
-    (sliding window == cache length) are never paged — the engine keeps
-    the reference path for those archs — but plain position windows (the
-    long-context SWA variant) mask exactly as in ``attn_block_step``.
+    contiguous layout's full-cache attention read).  With
+    ``use_kernel=True`` the Pallas kernel (kernels/paged_attn.py) replaces
+    the gather: it walks the block table page by page in VMEM, so the
+    virtual cache is never materialized and attention bytes scale with
+    ``lengths`` instead of pool size (docs/DESIGN.md §11).  The kernel
+    path requires the unified scheduler's position contract
+    ``positions[b, j] == lengths[b] + j``, which ``forward_routed``
+    guarantees.  Ring caches (sliding window == cache length) are never
+    paged — the engine keeps the reference path for those archs — but
+    plain position windows (the long-context SWA variant) mask exactly as
+    in ``attn_block_step``.
 
     x: (B, T, D); positions: (B, T) absolute; lengths/seg_lens: (B,).
     Returns ((B, T, D), cache')."""
@@ -578,19 +586,18 @@ def attn_block_step_paged(p: dict, cfg, cache: dict, x: Array,
         new_cache = {"k": _paged_scatter(cache["k"], k_new, page, slot),
                      "v": _paged_scatter(cache["v"], v_new, page, slot)}
 
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.paged_attention(q, new_cache, block_tables,
+                                         lengths, seg_lens, window=window)
+        out = out.reshape(b, t, cfg.num_heads * cfg.head_dim)
+        return quant.qdot("bse,ed->bsd", out, p["wo"]), new_cache
+
     bt = jnp.clip(block_tables, 0, num_pages - 1)
 
     def gather(pool):
         pages = jnp.take(pool, bt, axis=0)          # (B, NB, ps, Hkv, ·)
         return pages.reshape((b, nb * page_size) + pool.shape[2:])
-
-    if kv_quantized(cfg):
-        k_cache = dequantize_kv(gather(new_cache["k"]),
-                                gather(new_cache["k_scale"]), x.dtype)
-        v_cache = dequantize_kv(gather(new_cache["v"]),
-                                gather(new_cache["v_scale"]), x.dtype)
-    else:
-        k_cache, v_cache = gather(new_cache["k"]), gather(new_cache["v"])
 
     # virtual slot s holds absolute position s: the linear-cache mask
     slot_pos = jnp.arange(nb * page_size, dtype=jnp.int32)[None, None, :]
@@ -598,6 +605,21 @@ def attn_block_step_paged(p: dict, cfg, cache: dict, x: Array,
     mask = slot_pos <= qp                                       # (B, T, S)
     if window is not None:
         mask = mask & (slot_pos > qp - window)
+
+    if kv_quantized(cfg):
+        # dequantize only the slots some token attends (the per-row union
+        # of the mask): zeroing the int8 payload elsewhere first is
+        # bit-exact for every attended slot — excluded slots' logits are
+        # overwritten with NEG_INF regardless of their K/V content — and
+        # spares the multiply over the pool-sized dead tail
+        attended = jnp.any(mask, axis=1)[:, :, None, None]      # (B, S, 1, 1)
+        dq = lambda kk: dequantize_kv(
+            jnp.where(attended, gather(new_cache[kk]), 0),
+            gather(new_cache[kk + "_scale"]), x.dtype)
+        k_cache, v_cache = dq("k"), dq("v")
+    else:
+        k_cache, v_cache = gather(new_cache["k"]), gather(new_cache["v"])
+
     out = _attend_grouped_block(cfg, q, k_cache, v_cache, mask)
     out = out.reshape(b, t, cfg.num_heads * cfg.head_dim)
     return quant.qdot("bse,ed->bsd", out, p["wo"]), new_cache

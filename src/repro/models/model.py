@@ -219,7 +219,8 @@ def build_model(cfg) -> Model:
         return logits, cache
 
     # ---- unified token-budget forward -----------------------------------
-    def forward_routed(params, batch, cache, mesh=None, context_len=None):
+    def forward_routed(params, batch, cache, mesh=None, context_len=None,
+                       paged_kernel=False):
         """Length-agnostic unified step: one (B, T) token block at arbitrary
         per-row cache offsets (docs/DESIGN.md §6).
 
@@ -238,6 +239,8 @@ def build_model(cfg) -> Model:
         prompt prefix alias the same pages and the pool is sized in pages,
         not max_batch x max_cache slots.  Block tables are host-scheduler
         state handed to the device like ``lengths`` — never donated.
+        ``paged_kernel`` (static) attends through the Pallas block-table
+        kernel instead of the virtual-cache gather (docs/DESIGN.md §11).
 
         Returns (logits (B, V) at each row's LAST VALID position, cache',
         routing (L, B*T, K) int32 | None).  The cache is updated via
@@ -274,7 +277,8 @@ def build_model(cfg) -> Model:
                   if cache_len is not None else cfg.sliding_window)
         x, cache, routing = transformer.unified_stack(
             cfg, mesh, params["blocks"], x, positions, lengths, seg_lens,
-            cache, window, token_mask=token_mask, block_tables=block_tables)
+            cache, window, token_mask=token_mask, block_tables=block_tables,
+            paged_kernel=paged_kernel and block_tables is not None)
         sel = jnp.clip(seg_lens - 1, 0, t - 1)
         x_sel = jnp.take_along_axis(x, sel[:, None, None], axis=1)  # (B,1,D)
         x_sel = layers.norm_apply(cfg.norm, params["final_norm"], x_sel)

@@ -143,7 +143,7 @@ def init_blocks(cfg, key) -> dict:
 
 def _attn_mlp_block(cfg, mesh, layer_p, x, positions, window, mrope_pos,
                     cache_l=None, decode=False, token_mask=None,
-                    block_lens=None, block_tables=None):
+                    block_lens=None, block_tables=None, paged_kernel=False):
     """Generic attention(+cache) + {mlp | moe} block.
 
     Returns (x, new_cache, aux, routed) where ``routed`` is the MoE layer's
@@ -157,13 +157,15 @@ def _attn_mlp_block(cfg, mesh, layer_p, x, positions, window, mrope_pos,
     share this one body (docs/DESIGN.md §6).  ``block_tables`` (B, NB)
     additionally selects the paged-cache form of that path: ``cache_l``
     holds page-pool leaves and each row reaches its cache through its
-    block table (docs/DESIGN.md §7)."""
+    block table (docs/DESIGN.md §7); ``paged_kernel`` swaps that path's
+    virtual-cache gather for the Pallas block-table kernel (§11)."""
     h = layers.norm_apply(cfg.norm, layer_p["ln1"], x)
     if block_lens is not None and block_tables is not None:
         lengths, seg_lens = block_lens
         h, new_cache = attention.attn_block_step_paged(
             layer_p["attn"], cfg, cache_l, h, positions, lengths, seg_lens,
-            block_tables, window, mrope_pos, mesh=mesh)
+            block_tables, window, mrope_pos, mesh=mesh,
+            use_kernel=paged_kernel)
     elif block_lens is not None:
         lengths, seg_lens = block_lens
         h, new_cache = attention.attn_block_step(
@@ -464,7 +466,8 @@ def decode_stack(cfg, mesh, blocks, x, lengths, cache, window,
 
 
 def unified_stack(cfg, mesh, blocks, x, positions, lengths, seg_lens, cache,
-                  window, mrope_pos=None, token_mask=None, block_tables=None):
+                  window, mrope_pos=None, token_mask=None, block_tables=None,
+                  paged_kernel=False):
     """Length-agnostic token-block forward through all layers — the ONE
     layer body behind chunked prefill, decode, and mixed prefill/decode
     batches (the prefill/decode twin stacks remain as the
@@ -478,7 +481,9 @@ def unified_stack(cfg, mesh, blocks, x, positions, lengths, seg_lens, cache,
     keeps the zero-copy hot loop.  With ``block_tables`` (B, NB) the cache
     is the paged pool of ``paged_stack_cache_spec`` and every row reaches
     its slots through its block table (docs/DESIGN.md §7) — same carry,
-    same zero-copy property."""
+    same zero-copy property.  ``paged_kernel`` routes the paged path
+    through the Pallas block-table attention kernel instead of the
+    virtual-cache gather (docs/DESIGN.md §11)."""
     if cfg.family not in ("dense", "moe", "vlm", "audio"):
         raise NotImplementedError(
             f"unified_stack supports attention-cache families, not "
@@ -489,7 +494,8 @@ def unified_stack(cfg, mesh, blocks, x, positions, lengths, seg_lens, cache,
                                              window, mrope_pos, cl,
                                              token_mask=token_mask,
                                              block_lens=(lengths, seg_lens),
-                                             block_tables=block_tables)
+                                             block_tables=block_tables,
+                                             paged_kernel=paged_kernel)
         if routed is None:
             routed = jnp.zeros((), jnp.int32)
         return out, nc, routed

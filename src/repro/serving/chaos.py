@@ -1,8 +1,9 @@
 """Deterministic chaos smoke: the fault matrix the CI gate drives.
 
-Runs the unified and paged engines through every fault site
-(serving/faults.py) plus an overcommit-preemption scenario, and gates the
-resilience contract end to end:
+Runs the unified, paged, and paged-kernel (Pallas block-table attention,
+PR 8) engines through every fault site (serving/faults.py) plus
+overcommit-preemption scenarios, and gates the resilience contract end
+to end:
 
   1. no crash — every injected fault is absorbed by an engine guard
      (alloc exhaustion stalls admission, a failed dispatch re-runs the
@@ -37,13 +38,19 @@ from repro.configs.base import get_config
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.faults import Fault, FaultPlan
 
-# (name, paged, fault site) — alloc faults need the page allocator
+# (name, layout, fault site) — alloc faults need the page allocator;
+# "kernel" is the paged layout attended through the Pallas block-table
+# kernel (EngineConfig.paged_kernel, PR 8) — same fault sites, and its
+# fault-free baseline must equal the gather layout's token-for-token
 SCENARIOS = (
-    ("unified/dispatch", False, "dispatch"),
-    ("unified/nan", False, "nan"),
-    ("paged/alloc", True, "alloc"),
-    ("paged/dispatch", True, "dispatch"),
-    ("paged/nan", True, "nan"),
+    ("unified/dispatch", "unified", "dispatch"),
+    ("unified/nan", "unified", "nan"),
+    ("paged/alloc", "paged", "alloc"),
+    ("paged/dispatch", "paged", "dispatch"),
+    ("paged/nan", "paged", "nan"),
+    ("kernel/alloc", "kernel", "alloc"),
+    ("kernel/dispatch", "kernel", "dispatch"),
+    ("kernel/nan", "kernel", "nan"),
 )
 
 
@@ -54,12 +61,13 @@ def _cfg(arch: str):
     return get_config(arch).reduced().replace(capacity_factor=8.0)
 
 
-def _engine(cfg, *, paged: bool, plan: FaultPlan | None = None,
+def _engine(cfg, *, layout: str, plan: FaultPlan | None = None,
             num_pages: int = 0, overcommit: bool = False) -> ServingEngine:
     return ServingEngine(cfg, EngineConfig(
         max_batch=2, prefill_len=8, max_cache=32, unified_step=True,
-        chunk_len=3, async_steps=False, paged=paged, page_size=4,
-        num_pages=num_pages, overcommit=overcommit), fault_plan=plan)
+        chunk_len=3, async_steps=False, paged=layout != "unified",
+        page_size=4, num_pages=num_pages, overcommit=overcommit,
+        paged_kernel=layout == "kernel"), fault_plan=plan)
 
 
 def _serve(eng: ServingEngine, prompts, new_tokens: int,
@@ -104,14 +112,20 @@ def run_matrix(arch: str, *, new_tokens: int = 6, seed: int = 0,
 
     # fault-free baselines, one per layout
     baseline = {}
-    for paged in (False, True):
-        eng = _engine(cfg, paged=paged)
-        baseline[paged] = _serve(eng, prompts, new_tokens)
-        _check_drained(eng, errors, f"baseline/{'paged' if paged else 'unified'}")
+    for layout in ("unified", "paged", "kernel"):
+        eng = _engine(cfg, layout=layout)
+        baseline[layout] = _serve(eng, prompts, new_tokens)
+        _check_drained(eng, errors, f"baseline/{layout}")
+    # the Pallas kernel is the same attention over the same pool: its
+    # fault-free stream must equal the gather layout's before any fault
+    # scenario is worth running (PR 8 cross-path gate)
+    if baseline["kernel"] != baseline["paged"]:
+        errors.append("baseline/kernel: paged-attention kernel diverged "
+                      "from the virtual-cache gather, fault-free")
     if errors:        # a broken baseline invalidates the whole matrix
         return errors
 
-    for name, paged, site in SCENARIOS:
+    for name, layout, site in SCENARIOS:
         # three injections of the site spread over the run; nan faults
         # poison alternating rows so both slots exercise the quarantine
         if site == "nan":
@@ -125,13 +139,13 @@ def run_matrix(arch: str, *, new_tokens: int = 6, seed: int = 0,
         else:
             faults = [Fault(s, site) for s in (1, 3, 6)]
         plan = FaultPlan(faults)
-        eng = _engine(cfg, paged=paged, plan=plan)
+        eng = _engine(cfg, layout=layout, plan=plan)
         try:
             got = _serve(eng, prompts, new_tokens)
         except Exception as e:                     # gate 1: no crash
             errors.append(f"{name}: crashed — {type(e).__name__}: {e}")
             continue
-        if got != baseline[paged]:                 # gate 2: token identity
+        if got != baseline[layout]:                # gate 2: token identity
             errors.append(f"{name}: tokens diverged from fault-free run")
         if not plan.all_fired():                   # gate 4: coverage
             errors.append(f"{name}: unfired faults {plan.unfired()}")
@@ -139,19 +153,22 @@ def run_matrix(arch: str, *, new_tokens: int = 6, seed: int = 0,
         _check_traces(eng, errors, name)           # gate 5: budget
         if verbose:
             st = {k: v for k, v in eng.resilience_stats().items() if v}
-            print(f"  {name:18s} ok={got == baseline[paged]}  {st}")
+            print(f"  {name:18s} ok={got == baseline[layout]}  {st}")
 
     # overcommit-preemption: a pool too small for both lifetimes forces a
     # mid-decode preempt + prefix-cache restore; tokens must still match
-    name = "paged/preempt"
-    eng = _engine(cfg, paged=True, num_pages=4, overcommit=True)
-    try:
-        got = _serve(eng, prompts, 8, priorities=[0, 5])
-    except Exception as e:
-        errors.append(f"{name}: crashed — {type(e).__name__}: {e}")
-    else:
-        big = _engine(cfg, paged=True)
-        want = _serve(big, prompts, 8)
+    # the uncontended GATHER layout — the kernel row additionally proves
+    # the Pallas path re-attends correctly through remapped block tables
+    big = _engine(cfg, layout="paged")
+    want = _serve(big, prompts, 8)
+    for layout in ("paged", "kernel"):
+        name = f"{layout}/preempt"
+        eng = _engine(cfg, layout=layout, num_pages=4, overcommit=True)
+        try:
+            got = _serve(eng, prompts, 8, priorities=[0, 5])
+        except Exception as e:
+            errors.append(f"{name}: crashed — {type(e).__name__}: {e}")
+            continue
         if got != want:
             errors.append(f"{name}: preempted run diverged from "
                           "uncontended run")

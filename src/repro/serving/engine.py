@@ -221,6 +221,16 @@ class EngineConfig:
     # False keeps PR4's conservative whole-lifetime admission: an
     # admitted request can never hit pool OOM mid-generation.
     overcommit: bool = False
+    # Paged-attention Pallas kernel (kernels/paged_attn.py; requires
+    # paged): attention walks the block table page by page in VMEM —
+    # online softmax, grouped GQA, in-kernel int8 dequant — instead of
+    # gathering each row's pages into a (B, NB*page_size, Hkv, hd)
+    # virtual cache.  Attention reads then scale with row lengths, not
+    # pool size (docs/DESIGN.md §11); the gather path stays as the
+    # reference (token-identical under greedy, gated in CI perf-smoke
+    # and the chaos matrix).  Single-host only: mesh-sharded serving
+    # keeps the gather path, whose XLA ops shard under GSPMD.
+    paged_kernel: bool = False
     # NaN/Inf logit quarantine (serving/faults.py): when on, every
     # unified step reads back the jit's per-row finiteness flag
     # (_quarantine_check — a deliberate per-step device sync, the same
@@ -359,6 +369,10 @@ class ServingEngine:
             if self.ecfg.page_size < 1:
                 raise ValueError(
                     f"page_size must be >= 1, got {self.ecfg.page_size}")
+            if self.ecfg.paged_kernel and mesh is not None:
+                raise ValueError(
+                    "paged_kernel is single-host: mesh-sharded serving "
+                    "keeps the gather reference path (docs/DESIGN.md §11)")
             self.page_size = self.ecfg.page_size
             self.max_blocks = -(-c // self.page_size)
             self.num_pages = (self.ecfg.num_pages
@@ -372,6 +386,10 @@ class ServingEngine:
             self._jit_copy_pages = jax.jit(
                 self._copy_pages,
                 donate_argnums=(0,) if self.ecfg.donate_buffers else ())
+        elif self.ecfg.paged_kernel:
+            raise ValueError(
+                "paged_kernel requires paged=True (it attends through "
+                "the page pool's block tables)")
         else:
             self.cache = self.model.init_cache(b, c)
         self.prefill_pos = np.zeros((b,), np.int64)
@@ -498,7 +516,8 @@ class ServingEngine:
         logits, cache, routing = self.model.forward_routed(
             params, {"tokens": tokens, "lengths": lengths,
                      "seg_lens": seg_lens, "block_tables": block_tables},
-            cache, self.mesh, context_len=self.ecfg.max_cache)
+            cache, self.mesh, context_len=self.ecfg.max_cache,
+            paged_kernel=self.ecfg.paged_kernel)
         logits = jnp.where(jnp.isfinite(poison)[:, None], logits,
                            poison[:, None].astype(logits.dtype))
         bad = ~jnp.all(jnp.isfinite(
@@ -1362,6 +1381,7 @@ class ServingEngine:
         s = self.stats
         return {
             "paged": True,
+            "paged_kernel": self.ecfg.paged_kernel,
             "num_pages": self.num_pages,
             "page_size": self.page_size,
             "pages_in_use": self.allocator.pages_in_use,

@@ -103,6 +103,28 @@ def test_r1_flags_planted_async_cache_copy(decode_prog):
                f.detail.get("line", "") for f in findings)
 
 
+def test_r1_virtual_cache_tripwire_and_kernel_clean():
+    """PR8 extension: R1 proves the Pallas kernel program never touches a
+    virtual-cache-sized buffer, and the detector provably fires — the
+    reference gather path at the SAME pool geometry materializes the
+    (B, NB*page_size, Hkv, hd) buffer as gathers (plus copies of it), the
+    exact traffic the kernel removes."""
+    from repro.analysis.donation import virtual_cache_traffic
+    kern = programs_lib.trace_program("paged_kernel", ARCH)
+    assert virtual_cache_traffic(kern) == []
+    assert DonationAliasRule().check(kern) == []
+
+    gather = programs_lib.trace_program(
+        "paged", ARCH,
+        ecfg_kw=dict(page_size=kern.ecfg.page_size,
+                     num_pages=kern.ecfg.num_pages))
+    traffic = virtual_cache_traffic(gather)
+    assert any(kind == "gather" for kind, _, _ in traffic)
+    # the gather variant itself is NOT linted for virtual-cache traffic
+    # (paged_kernel=False) — it stays the legal reference path
+    assert DonationAliasRule().check(gather) == []
+
+
 # ---------------------------------------------------------------------------
 # R2 collective-bytes
 

@@ -212,6 +212,119 @@ def test_flash_attention_block_invariance(bq, bk):
                                rtol=2e-5, atol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# paged attention kernel (block-table decode + chunked prefill)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.paged_attn import paged_attention
+
+
+def _paged_case(seed, *, b, t, hq, hkv, hd, ps, nb, num_pages, quant=False,
+                dtype=jnp.float32):
+    """Random pool + per-row block tables (distinct pages per row) with
+    lengths spread over the table's reach and ragged seg_lens."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, t, hq, hd)) * 0.1, dtype)
+    bt = jnp.asarray(rng.permuted(
+        np.tile(np.arange(num_pages), (b, 1)), axis=1)[:, :nb], jnp.int32)
+    lengths = jnp.asarray(rng.integers(0, max(nb * ps - t, 1), b), jnp.int32)
+    seg = jnp.asarray(rng.integers(0, t + 1, b), jnp.int32)
+    shape = (num_pages, ps, hkv, hd)
+    if quant:
+        kp = jnp.asarray(rng.integers(-127, 128, shape), jnp.int8)
+        vp = jnp.asarray(rng.integers(-127, 128, shape), jnp.int8)
+        # spread scales over two orders of magnitude: the in-kernel
+        # dequant must track per-(page, slot, head) scale exactly
+        ks = jnp.asarray(10 ** rng.uniform(-3, -1, shape[:-1] + (1,)),
+                         jnp.float32)
+        vs = jnp.asarray(10 ** rng.uniform(-3, -1, shape[:-1] + (1,)),
+                         jnp.float32)
+    else:
+        kp = jnp.asarray(rng.standard_normal(shape) * 0.1, dtype)
+        vp = jnp.asarray(rng.standard_normal(shape) * 0.1, dtype)
+        ks = vs = None
+    return q, kp, vp, bt, lengths, seg, ks, vs
+
+
+@pytest.mark.parametrize("t,hq,hkv,ps,nb,window", [
+    (1, 4, 2, 8, 4, None),       # decode, G=2
+    (1, 8, 2, 16, 2, None),      # decode, G=4
+    (4, 4, 2, 5, 7, None),       # chunked prefill, page_size divides nothing
+    (6, 8, 2, 3, 9, 4),          # windowed prefill, ragged everything
+    (7, 6, 6, 4, 6, None),       # MHA (G=1), t*G not a block multiple
+    (3, 4, 1, 5, 5, 7),          # single kv head, window wider than a page
+])
+@pytest.mark.parametrize("quant", [False, True])
+def test_paged_attention_matches_ref(t, hq, hkv, ps, nb, window, quant):
+    """Kernel vs page-walk oracle across ragged page sizes, GQA group
+    counts, window/non-window, fp and int8-with-scales pools."""
+    q, kp, vp, bt, ln, sg, ks, vs = _paged_case(
+        t * 100 + hq * 10 + ps, b=3, t=t, hq=hq, hkv=hkv, hd=32, ps=ps,
+        nb=nb, num_pages=nb + 3, quant=quant)
+    y = paged_attention(q, kp, vp, bt, ln, sg, k_scale=ks, v_scale=vs,
+                        window=window, interpret=True)
+    y_r = ref.paged_attention_ref(q, kp, vp, bt, ln, sg, k_scale=ks,
+                                  v_scale=vs, window=window)
+    assert y.shape == y_r.shape == q.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bq", [1, 2, 8, 128])
+def test_paged_attention_block_q_invariance(bq):
+    """Output must not depend on the q-row tiling."""
+    q, kp, vp, bt, ln, sg, ks, vs = _paged_case(
+        11, b=2, t=5, hq=4, hkv=2, hd=32, ps=4, nb=6, num_pages=9)
+    y = paged_attention(q, kp, vp, bt, ln, sg, block_q=bq, interpret=True)
+    y_r = ref.paged_attention_ref(q, kp, vp, bt, ln, sg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_padding_rows_zero():
+    """Tokens past seg_lens are padding: their output rows must be exactly
+    zero (finite garbage would still be ignored by the engine's last-valid
+    logit selection, but zero is the kernel's contract)."""
+    q, kp, vp, bt, ln, sg, *_ = _paged_case(
+        5, b=2, t=6, hq=4, hkv=2, hd=32, ps=4, nb=6, num_pages=8)
+    sg = jnp.asarray([2, 0], jnp.int32)
+    y = paged_attention(q, kp, vp, bt, ln, sg, interpret=True)
+    assert float(jnp.max(jnp.abs(y[0, 2:]))) == 0.0
+    assert float(jnp.max(jnp.abs(y[1]))) == 0.0
+
+
+def test_paged_attention_garbage_pages_masked():
+    """Pool pages outside every row's block-table reach hold NaN/Inf
+    garbage; table entries past a row's live extent point at page 0.  The
+    position mask (and the OOB write sentinel upstream) must keep all of
+    it out of the output."""
+    q, kp, vp, bt, ln, sg, *_ = _paged_case(
+        7, b=2, t=3, hq=4, hkv=2, hd=32, ps=4, nb=4, num_pages=8)
+    used = np.unique(np.asarray(bt))
+    garbage = np.setdiff1d(np.arange(8), used)
+    kp = kp.at[garbage].set(jnp.nan)
+    vp = vp.at[garbage].set(jnp.inf)
+    y = paged_attention(q, kp, vp, bt, ln, sg, interpret=True)
+    y_r = ref.paged_attention_ref(q, kp, vp, bt, ln, sg)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ops_paged_attention_dispatches_cache_dict():
+    """ops.paged_attention unpacks the pool cache dict and routes int8
+    pools (sibling scale leaves) to the in-kernel-dequant variant."""
+    q, kp, vp, bt, ln, sg, ks, vs = _paged_case(
+        3, b=2, t=1, hq=4, hkv=2, hd=32, ps=8, nb=3, num_pages=5,
+        quant=True)
+    y = ops.paged_attention(q, {"k": kp, "v": vp, "k_scale": ks,
+                                "v_scale": vs}, bt, ln, sg)
+    y_r = ref.paged_attention_ref(q, kp, vp, bt, ln, sg, k_scale=ks,
+                                  v_scale=vs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_model_level_flash_kernel_equivalence():
     """cfg.use_flash_kernel routes attention through the Pallas kernel
     (interpret mode on CPU) and must match the standard path end-to-end."""

@@ -1,0 +1,253 @@
+"""ISSUE 8 tentpole: Pallas paged-attention kernel behind the gather path.
+
+Three layers of guarantees (docs/DESIGN.md §11):
+
+  * **model** — ``forward_routed(paged_kernel=True)`` is token-equivalent
+    to the virtual-cache gather path for fp32 and int8 pools, at page
+    sizes dividing neither the prompt nor the cache;
+  * **engine** — the ``EngineConfig.paged_kernel`` engine generates the
+    EXACT greedy token streams of the gather-path engine through the full
+    ServingEngine: mixed prefill/decode batches, prefix-cache hits,
+    overcommit preempt/restore, and the int8 KV cache — with ZERO extra
+    jit traces (the kernel lives inside the one unified program);
+  * **reference path** — the satellite fix (dequantize only attended
+    slots) is bit-exact against the old dequantize-everything gather.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import attention
+from repro.models.model import build_model
+from repro.serving.engine import EngineConfig, ServingEngine
+
+MOE_ARCH = "qwen3_moe_30b_a3b"
+DENSE_ARCH = "qwen3_0_6b"
+
+
+def nocap(arch, **kw):
+    return get_config(arch).reduced().replace(capacity_factor=8.0, **kw)
+
+
+def generations(done):
+    return {r.uid: list(r.generated) for r in done}
+
+
+def _engine(cfg, **kw):
+    eng_kw = dict(max_batch=2, prefill_len=8, max_cache=32,
+                  async_steps=False, chunk_len=3, paged=True, page_size=5)
+    eng_kw.update(kw)
+    return ServingEngine(cfg, EngineConfig(**eng_kw),
+                         rng=jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# model level: kernel path == gather path through forward_routed
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", [MOE_ARCH, DENSE_ARCH])
+@pytest.mark.parametrize("kv_dtype", ["native", "int8"])
+def test_forward_routed_kernel_matches_gather(arch, kv_dtype):
+    """Chunked prefill + decode through forward_routed: the Pallas path's
+    greedy argmax must equal the gather path's at every step (page size 5
+    divides neither the 8-token prompt nor the 32-slot cache)."""
+    cfg = nocap(arch, kv_cache_dtype=kv_dtype)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s, ps, nb = 2, 8, 5, 7
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 100, (b, s)),
+                       jnp.int32)
+    bt = jnp.asarray(np.arange(b * nb).reshape(b, nb), jnp.int32)
+    outs = {}
+    for pk in (False, True):
+        cache = model.init_paged_cache(b * nb, ps)
+        argmaxes = []
+        last = None
+        for lo in range(0, s, 3):                      # chunked prefill
+            hi = min(lo + 3, s)
+            logits, cache, _ = model.forward_routed(
+                params, {"tokens": toks[:, lo:hi],
+                         "lengths": jnp.full((b,), lo, jnp.int32),
+                         "seg_lens": jnp.full((b,), hi - lo, jnp.int32),
+                         "block_tables": bt}, cache, paged_kernel=pk)
+            last = jnp.argmax(logits, -1).astype(jnp.int32)
+            argmaxes.append(np.asarray(last))
+        for i in range(4):                             # greedy decode
+            logits, cache, _ = model.forward_routed(
+                params, {"tokens": last[:, None],
+                         "lengths": jnp.full((b,), s + i, jnp.int32),
+                         "seg_lens": jnp.ones((b,), jnp.int32),
+                         "block_tables": bt}, cache, paged_kernel=pk)
+            last = jnp.argmax(logits, -1).astype(jnp.int32)
+            argmaxes.append(np.asarray(last))
+        outs[pk] = argmaxes
+    np.testing.assert_array_equal(np.stack(outs[False]),
+                                  np.stack(outs[True]))
+
+
+# ---------------------------------------------------------------------------
+# engine level: EXACT token streams, all serving features
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", [MOE_ARCH, DENSE_ARCH])
+def test_paged_kernel_engine_matches_gather(arch):
+    """Mixed-length prompts with a mid-flight arrival (mixed prefill /
+    decode batches): kernel and gather engines must emit identical greedy
+    streams, with identical jit trace counts (zero extra traces — the
+    kernel lives inside the one unified program, analysis R3)."""
+    cfg = nocap(arch)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 100, n) for n in (8, 5, 8, 7)]
+    outs, traces = {}, {}
+    for pk in (False, True):
+        eng = _engine(cfg, paged_kernel=pk)
+        eng.submit(prompts[0], max_new_tokens=6)
+        eng.step()
+        eng.step()
+        for p in prompts[1:]:
+            eng.submit(p, max_new_tokens=4)
+        outs[pk] = generations(eng.run_until_done())
+        traces[pk] = dict(eng.trace_counts)
+    assert outs[True] == outs[False]
+    assert traces[True] == traces[False]
+
+
+def test_paged_kernel_engine_int8_kv_matches_gather():
+    cfg = nocap(MOE_ARCH, kv_cache_dtype="int8")
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 100, n) for n in (7, 5, 9)]
+    outs = {}
+    for pk in (False, True):
+        eng = _engine(cfg, paged_kernel=pk)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5)
+        outs[pk] = generations(eng.run_until_done())
+    assert outs[True] == outs[False]
+
+
+def test_paged_kernel_prefix_hits_match_gather():
+    """Requests sharing a system prompt reuse its pages via the prefix
+    cache; the kernel path must attend through those shared pages to the
+    same tokens, and the hits must actually fire."""
+    cfg = nocap(MOE_ARCH)
+    rng = np.random.default_rng(2)
+    sysp = rng.integers(0, 100, 6)
+    prompts = [np.concatenate([sysp, rng.integers(0, 100, 3)])
+               for _ in range(3)]
+    outs, stats = {}, {}
+    for pk in (False, True):
+        eng = _engine(cfg, page_size=4, paged_kernel=pk)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5)
+        outs[pk] = generations(eng.run_until_done())
+        stats[pk] = eng.paged_stats()
+    assert outs[True] == outs[False]
+    assert stats[True]["prefix_hits"] >= 1
+    assert stats[True]["prefix_hit_tokens"] == stats[False]["prefix_hit_tokens"]
+
+
+def test_paged_kernel_preempt_restore_matches_uncontended():
+    """Overcommit on a pool too small for both lifetimes forces a
+    mid-decode preempt + prefix-cache restore; the kernel engine's tokens
+    must match the uncontended gather engine's (restore re-attends
+    through remapped block tables)."""
+    cfg = nocap(MOE_ARCH)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 100, 7), rng.integers(0, 100, 5)]
+
+    def serve(eng, priorities):
+        uids = [eng.submit(p, max_new_tokens=8, priority=pr)
+                for p, pr in zip(prompts, priorities)]
+        eng.run_until_done()
+        return {i: list(eng._all[u].generated) for i, u in enumerate(uids)}
+
+    eng = _engine(cfg, page_size=4, num_pages=4, overcommit=True,
+                  paged_kernel=True)
+    got = serve(eng, [0, 5])
+    assert eng.resilience_stats()["preemptions"] >= 1
+    assert eng.resilience_stats()["restores"] >= 1
+    want = serve(_engine(cfg, page_size=4), [0, 0])
+    assert got == want
+
+
+def test_paged_kernel_requires_paged():
+    with pytest.raises(ValueError, match="paged_kernel requires paged"):
+        ServingEngine(nocap(MOE_ARCH), EngineConfig(
+            max_batch=2, prefill_len=8, max_cache=32, paged_kernel=True))
+
+
+# ---------------------------------------------------------------------------
+# satellite fix: attended-slot dequant is bit-exact vs full dequant
+# ---------------------------------------------------------------------------
+
+def test_masked_dequant_bit_exact_vs_full_dequant():
+    """The gather path now dequantizes only the slots some token attends.
+    Against the old dequantize-the-whole-virtual-cache behavior (inlined
+    here from the module's own helpers) the outputs of every VALID token
+    must be bit-identical — excluded slots' logits are NEG_INF-masked, so
+    their (finite) K/V content never reaches the softmax."""
+    cfg = nocap(MOE_ARCH, kv_cache_dtype="int8")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lp = jax.tree.map(lambda a: a[0], params["blocks"])["attn"]
+    b, t, ps, nb, num_pages = 2, 3, 4, 6, 9
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((b, t, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    lengths = jnp.asarray([6, 2], jnp.int32)
+    seg_lens = jnp.asarray([3, 2], jnp.int32)
+    positions = lengths[:, None] + jnp.arange(t)[None]
+    bt = jnp.asarray(rng.permuted(np.tile(np.arange(num_pages),
+                                          (b, 1)), axis=1)[:, :nb],
+                     jnp.int32)
+    shape = (num_pages, ps, cfg.num_kv_heads, cfg.head_dim)
+    # garbage EVERYWHERE the scatter doesn't overwrite: huge scales make
+    # any accidental dequant of an unattended slot numerically loud
+    cache = {"k": jnp.asarray(rng.integers(-127, 128, shape), jnp.int8),
+             "v": jnp.asarray(rng.integers(-127, 128, shape), jnp.int8),
+             "k_scale": jnp.asarray(rng.random(shape[:-1] + (1,)) * 1e6,
+                                    jnp.float32),
+             "v_scale": jnp.asarray(rng.random(shape[:-1] + (1,)) * 1e6,
+                                    jnp.float32)}
+
+    out, new_cache = attention.attn_block_step_paged(
+        lp, cfg, cache, x, positions, lengths, seg_lens, bt, None)
+
+    # the pre-change computation, step for step
+    q, k_new, v_new = attention._project_qkv(lp, cfg, x, positions, None,
+                                             None)
+    valid = jnp.arange(t)[None, :] < seg_lens[:, None]
+    blk = positions // ps
+    page = jnp.take_along_axis(bt, jnp.clip(blk, 0, nb - 1), axis=1)
+    page = jnp.where(valid & (blk < nb), page, num_pages)
+    slot = positions % ps
+    kq, ksc = attention.quantize_kv(k_new)
+    vq, vsc = attention.quantize_kv(v_new)
+    ref_cache = {
+        kk: attention._paged_scatter(cache[kk], nn, page, slot)
+        for kk, nn in (("k", kq), ("v", vq),
+                       ("k_scale", ksc), ("v_scale", vsc))}
+    btc = jnp.clip(bt, 0, num_pages - 1)
+    gather = lambda pool: jnp.take(pool, btc, axis=0).reshape(
+        (b, nb * ps) + pool.shape[2:])
+    k_cache = attention.dequantize_kv(gather(ref_cache["k"]),
+                                      gather(ref_cache["k_scale"]), x.dtype)
+    v_cache = attention.dequantize_kv(gather(ref_cache["v"]),
+                                      gather(ref_cache["v_scale"]), x.dtype)
+    slot_pos = jnp.arange(nb * ps, dtype=jnp.int32)[None, None, :]
+    qp = jnp.where(valid, positions, -1)[:, :, None]
+    mask = slot_pos <= qp
+    ref_out = attention._attend_grouped_block(cfg, q, k_cache, v_cache, mask)
+    ref_out = ref_out.reshape(b, t, cfg.num_heads * cfg.head_dim)
+    from repro.core import quant
+    ref_out = quant.qdot("bse,ed->bsd", ref_out, lp["wo"])
+
+    for leaf in new_cache:
+        np.testing.assert_array_equal(np.asarray(new_cache[leaf]),
+                                      np.asarray(ref_cache[leaf]))
+    for bi in range(b):
+        n = int(seg_lens[bi])
+        np.testing.assert_array_equal(np.asarray(out[bi, :n]),
+                                      np.asarray(ref_out[bi, :n]))
